@@ -1,0 +1,57 @@
+"""Paper Figs. 5-7: BSI time-per-voxel and speedup vs tile size.
+
+Wall-time on this container is CPU (the jnp forms are the paper's CPU-analog
+measurements, Fig. 7); the TPU-kernel story is carried by the roofline
+dry-run (`repro.launch.dryrun_bsi`).  ``gather`` plays NiftyReg-TV (the
+paper's baseline), ``tt``/``ttli`` are the paper's contributions, and
+``separable`` is this repo's beyond-paper form.
+
+CSV: name,us_per_call,derived  where derived = ns/voxel | speedup-vs-gather.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from benchmarks.common import SCALED_VOLUMES, FULL_VOLUMES, emit, grid_for, time_fn
+from repro.core import ffd
+from repro.core.interpolate import interpolate
+
+TILES = [3, 4, 5, 6, 7]
+MODES = ["gather", "tt", "ttli", "separable"]
+
+
+def run(full=False, volumes=("phantom2", "porcine1"), reps=3):
+    vols = FULL_VOLUMES if full else SCALED_VOLUMES
+    rows = []
+    for t in TILES:
+        tile = (t, t, t)
+        base_ns = None
+        for mode in MODES:
+            total_t, total_vox = 0.0, 0
+            for name in volumes:
+                vol = vols[name]
+                phi = grid_for(vol, tile)
+                fn = jax.jit(functools.partial(
+                    ffd.dense_field, tile=tile, vol_shape=vol, mode=mode))
+                total_t += time_fn(fn, phi, reps=reps)
+                total_vox += vol[0] * vol[1] * vol[2]
+            ns_per_voxel = total_t / total_vox * 1e9
+            if mode == "gather":
+                base_ns = ns_per_voxel
+            rows.append((
+                f"bsi_speed/tile{t}/{mode}",
+                round(total_t / len(volumes) * 1e6, 1),
+                f"{ns_per_voxel:.2f}ns/vox|x{base_ns / ns_per_voxel:.2f}",
+            ))
+    return rows
+
+
+def main(full=False):
+    return emit(run(full), ["name", "us_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    import sys
+    main(full="--full" in sys.argv)

@@ -1,0 +1,52 @@
+"""Shared benchmark plumbing: timing, CSV output, volume scaling."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Scaled-down stand-ins for the paper Table 2 volumes (CPU wall-time budget);
+# pass --full to benchmark the exact paper resolutions.
+SCALED_VOLUMES = {
+    "phantom1": (128, 57, 96),
+    "phantom2": (74, 33, 52),
+    "phantom3": (74, 33, 52),
+    "porcine1": (76, 42, 53),
+    "porcine2": (67, 42, 59),
+}
+FULL_VOLUMES = {
+    "phantom1": (512, 228, 385),
+    "phantom2": (294, 130, 208),
+    "phantom3": (294, 130, 208),
+    "porcine1": (303, 167, 212),
+    "porcine2": (267, 169, 237),
+}
+
+
+def time_fn(fn, *args, reps=5, warmup=2):
+    """Median wall time of a jitted fn (blocks on completion)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def grid_for(volume, tile, channels=3, seed=0):
+    from repro.core import ffd
+
+    gshape = ffd.grid_shape_for_volume(volume, tile)
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(gshape + (channels,)), jnp.float32)
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

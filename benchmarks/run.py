@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows for:
+  * bsi_speed          — paper Figs. 5-7 (time/voxel + speedup, tile sweep)
+  * bsi_accuracy       — paper Tables 3-4 (error vs float64 reference)
+  * registration_bench — paper Figs. 8-9 + Table 5 (FFD time + MAE/SSIM)
+  * transfer_model     — paper Appendix A (Eqs. A.1-A.4 transfer counts)
+
+Roofline tables (assignment §Roofline) are produced separately from the
+dry-run artifacts by ``python -m repro.launch.roofline_report``.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bsi_accuracy, bsi_speed, registration_bench, transfer_model
+
+    suites = [
+        ("transfer_model", transfer_model.main),
+        ("bsi_accuracy", bsi_accuracy.main),
+        ("bsi_speed", lambda: bsi_speed.main(full="--full" in sys.argv)),
+        ("registration_bench", registration_bench.main),
+    ]
+    failures = []
+    for name, fn in suites:
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark suites failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

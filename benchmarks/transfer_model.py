@@ -1,0 +1,50 @@
+"""Paper Appendix A: off-chip -> on-chip transfer-count model (Eqs. A.1-A.4).
+
+Evaluates the analytic transfer counts for the paper's schemes and this
+repo's TPU mapping (whole-grid-in-VMEM: each control point crosses HBM once,
+the dense field is written once), for the five dataset volumes at the
+default 5^3 tile.
+
+CSV: name,us_per_call,derived  (derived = transfers or ratio).
+"""
+from __future__ import annotations
+
+from benchmarks.common import FULL_VOLUMES, emit
+
+N = 64          # control points per voxel neighbourhood
+L = 32          # words per transaction (paper's L-word cache line)
+
+
+def run(tile=5, block=(4, 4, 4)):
+    T = tile**3
+    rows = []
+    for name, vol in FULL_VOLUMES.items():
+        M = vol[0] * vol[1] * vol[2]
+        no_tiles = N * M / L                       # Eq. A.1 (TV, no tiling)
+        hw_interp = 8 * M / L                      # Eq. A.2 (texture HW)
+        block_per_tile = N * M / (T * L)           # Eq. A.3 (TV-tiling)
+        l, m, n = block
+        blocks_of_tiles = ((4 + l - 1) * (4 + m - 1) * (4 + n - 1) * M
+                           / (l * m * n * T * L))  # Eq. A.4 (paper TT)
+        # TPU TT mapping: grid resident in VMEM -> each point read once
+        ours = (M / T * 1.0 + M) / L               # grid once + field write
+        rows += [
+            (f"transfer_model/{name}/A1_no_tiles", 0.0, f"{no_tiles:.3g}"),
+            (f"transfer_model/{name}/A2_texture_hw", 0.0, f"{hw_interp:.3g}"),
+            (f"transfer_model/{name}/A3_block_per_tile", 0.0, f"{block_per_tile:.3g}"),
+            (f"transfer_model/{name}/A4_blocks_of_tiles", 0.0, f"{blocks_of_tiles:.3g}"),
+            (f"transfer_model/{name}/tpu_vmem_resident", 0.0, f"{ours:.3g}"),
+            (f"transfer_model/{name}/tt_vs_tv_ratio", 0.0,
+             f"x{block_per_tile / blocks_of_tiles:.1f}"),
+            (f"transfer_model/{name}/tt_vs_texture_ratio", 0.0,
+             f"x{hw_interp / blocks_of_tiles:.1f}"),
+        ]
+    return rows
+
+
+def main():
+    return emit(run(), ["name", "us_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""End-to-end FFD registration of a synthetic liver-phantom pair (paper §6-7).
+
+Creates a (fixed, moving) pair with a known smooth deformation (the
+synthetic pneumoperitoneum), registers with affine then FFD (BSI inner
+loop in the mode of your choice), and reports MAE/SSIM (paper Table 5)
+plus the BSI share of runtime (paper Fig. 8-9 Amdahl argument).
+
+    PYTHONPATH=src python examples/register_volumes.py [--mode separable]
+"""
+import argparse
+import time
+
+from repro.core import metrics
+from repro.core.registration import affine_register, ffd_register
+from repro.data.volumes import make_pair
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="separable",
+                    choices=["gather", "tt", "ttli", "separable"])
+    ap.add_argument("--shape", type=int, nargs=3, default=(64, 56, 48))
+    ap.add_argument("--iters", type=int, default=30)
+    args = ap.parse_args()
+
+    fixed, moving, _ = make_pair(shape=tuple(args.shape), tile=(6, 6, 6),
+                                 magnitude=2.2, seed=0)
+    print(f"pair {fixed.shape}; pre-registration: "
+          f"mae={float(metrics.mae(moving, fixed)):.4f} "
+          f"ssim={float(metrics.ssim(moving, fixed)):.4f}")
+
+    aff = affine_register(fixed, moving, iters=40)
+    print(f"affine      ({aff.seconds:5.1f}s): "
+          f"mae={float(metrics.mae(aff.warped, fixed)):.4f} "
+          f"ssim={float(metrics.ssim(aff.warped, fixed)):.4f}")
+
+    res = ffd_register(fixed, moving, tile=(6, 6, 6), levels=2,
+                       iters=args.iters, mode=args.mode,
+                       measure_bsi_time=True)
+    print(f"ffd/{args.mode:9s} ({res.seconds:5.1f}s, "
+          f"~{res.bsi_seconds:.1f}s in BSI): "
+          f"mae={float(metrics.mae(res.warped, fixed)):.4f} "
+          f"ssim={float(metrics.ssim(res.warped, fixed)):.4f}")
+
+
+if __name__ == "__main__":
+    main()

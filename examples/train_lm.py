@@ -1,0 +1,66 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Uses the full production path — config, synthetic data pipeline, AdamW,
+checkpointing (atomic keep-k + resume), straggler watchdog — on a single
+CPU device.  Default config is a 100M-class dense model (internlm2 family
+geometry, scaled); loss should drop steadily on the motif-structured
+synthetic stream.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --steps 200   # resumes!
+"""
+import argparse
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.launch.train import TrainLoop
+from repro.optim.optimizer import OptConfig
+
+
+def model_100m():
+    return ModelConfig(
+        name="demo-100m", family="dense",
+        num_layers=8, d_model=512, num_heads=8, num_kv_heads=4,
+        d_ff=2048, vocab_size=32768, head_dim=64,
+        dtype="float32", remat=False,
+        loss_chunk=256, attn_q_chunk=256, attn_kv_chunk=256,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--out", default="/tmp/repro_train_100m")
+    ap.add_argument("--tiny", action="store_true",
+                    help="~4M params (fast CI check)")
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    if args.tiny:
+        cfg = ModelConfig(**{**cfg.__dict__, "num_layers": 2, "d_model": 128,
+                             "d_ff": 512, "vocab_size": 4096,
+                             "name": "demo-tiny"})
+    n_params = sum(
+        int(__import__("numpy").prod(p.shape))
+        for p in __import__("jax").tree_util.tree_leaves(
+            __import__("repro.models.model", fromlist=["abstract_model"])
+            .abstract_model(cfg))
+    )
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params")
+
+    loop = TrainLoop(cfg, OptConfig(lr=3e-3, warmup_steps=20,
+                                    total_steps=args.steps), args.out)
+    start = loop.init_or_restore()
+    print(f"starting at step {start}")
+    pipe = TokenPipeline(PipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch))
+    losses = loop.run(pipe, args.steps, ckpt_every=50, log_every=10)
+    if losses:
+        print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+              f"over {len(losses)} steps; stragglers={loop.stragglers}")
+
+
+if __name__ == "__main__":
+    main()

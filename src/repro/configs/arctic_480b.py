@@ -1,0 +1,20 @@
+"""arctic-480b [moe] — [hf:Snowflake/snowflake-arctic-base; hf]."""
+from repro.configs.base import ModelConfig, register
+
+register(
+    ModelConfig(
+        name="arctic-480b", family="moe",
+        num_layers=35, d_model=7168, num_heads=56, num_kv_heads=8,
+        d_ff=4864, vocab_size=32000, head_dim=128,
+        num_experts=128, top_k=2, moe_d_ff=4864, dense_residual=True,
+        source="[hf:Snowflake/snowflake-arctic-base; hf]",
+        notes="128 experts top-2 in parallel with a dense residual FFN",
+    ),
+    smoke=ModelConfig(
+        name="arctic-480b", family="moe",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=96, vocab_size=512, head_dim=16,
+        num_experts=8, top_k=2, moe_d_ff=96, dense_residual=True,
+        remat=False, loss_chunk=64, attn_q_chunk=32, attn_kv_chunk=32,
+    ),
+)

@@ -1,0 +1,175 @@
+"""Model/run configuration: the one dataclass all 10 assigned archs fit in.
+
+Each ``src/repro/configs/<arch>.py`` instantiates ``ModelConfig`` with the
+exact assigned numbers and registers it (plus a reduced ``smoke`` variant for
+CPU tests).  ``input_specs`` builds the ShapeDtypeStruct stand-ins for every
+(config x shape) dry-run cell — no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig", "ShapeCfg", "SHAPES", "register", "get_config", "list_configs", "input_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None   # default d_model // num_heads
+    # --- attention pattern ---
+    window: int = 0                  # sliding window size; 0 = full attention
+    window_pattern: tuple = ()       # per-layer: 1 = local (use window), 0 = global; cycled
+    attn_logit_softcap: float = 0.0  # gemma2-style tanh softcap (0 = off)
+    final_logit_softcap: float = 0.0
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    # --- MoE ---
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim
+    dense_residual: bool = False     # arctic: dense FFN in parallel with MoE
+    capacity_factor: float = 1.25
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    slstm_every: int = 0             # xLSTM: every k-th block is sLSTM
+    mamba_conv: int = 4
+    mamba_expand: int = 2
+    # --- enc-dec / vlm frontends (stubs per assignment) ---
+    encoder_layers: int = 0
+    encoder_seq_divisor: int = 4     # stub frame rate: enc_len = seq // divisor
+    cross_attn_every: int = 0        # every k-th decoder layer adds cross-attn
+    img_tokens: int = 0
+    # --- numerics / memory ---
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "silu"                # silu (GLU) | gelu (plain MLP)
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "nothing"    # nothing | dots (see DESIGN.md §Perf)
+    seq_parallel: bool = True        # SP residual stream (off for recurrent
+                                     # families: chunk reshapes re-gather)
+    attn_remat: bool = True      # inner checkpoint: recompute attention probs
+    scan_layers: bool = True
+    loss_chunk: int = 1024           # sequence-chunked xent to bound logits
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 1024
+    kv_cache_dtype: str = "bfloat16" # bfloat16 | int8
+    # --- provenance ---
+    source: str = ""                 # [source; verified-tier] from assignment
+    notes: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def layer_windows(self) -> tuple:
+        """Per-layer window size: 0 = full attention, >0 = sliding window."""
+        if not self.window_pattern:
+            return (self.window,) * self.num_layers
+        pat = self.window_pattern
+        return tuple(
+            self.window if pat[i % len(pat)] else 0 for i in range(self.num_layers)
+        )
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch has a long-context (500k) decode path."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        wins = self.layer_windows()
+        # sliding-window-dominant attention counts (gemma local:global)
+        return bool(wins) and sum(1 for w in wins if w > 0) >= len(wins) // 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524_288, 1, "decode"),
+}
+
+_REGISTRY: dict = {}
+_ARCH_MODULES = [
+    "qwen1_5_32b", "gemma3_1b", "gemma2_2b", "internlm2_1_8b", "qwen2_moe_a2_7b",
+    "arctic_480b", "xlstm_1_3b", "hymba_1_5b", "whisper_base",
+    "llama3_2_vision_90b", "bsi_paper",
+]
+
+
+def register(cfg: ModelConfig, smoke: ModelConfig | None = None):
+    _REGISTRY[cfg.name] = (cfg, smoke)
+    return cfg
+
+
+def _load_all():
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    cfg, smoke_cfg = _REGISTRY[name]
+    if smoke:
+        if smoke_cfg is None:
+            raise KeyError(f"{name} has no smoke variant")
+        return smoke_cfg
+    return cfg
+
+
+def list_configs() -> list:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeCfg) -> tuple:
+    """(supported, reason) for an (arch x shape) dry-run cell."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: no sub-quadratic 500k path (DESIGN.md §6.9)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg) -> dict:
+    """ShapeDtypeStruct stand-ins for one dry-run cell (weak-type correct)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:  # decode: one new token against a seq_len-deep cache
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.family == "encdec":
+        enc_len = S // cfg.encoder_seq_divisor
+        specs["frame_embeddings"] = jax.ShapeDtypeStruct(
+            (B, enc_len, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "vlm":
+        specs["image_embeddings"] = jax.ShapeDtypeStruct(
+            (B, cfg.img_tokens, cfg.d_model), jnp.bfloat16
+        )
+    return specs

@@ -1,0 +1,26 @@
+"""The paper's own workload: BSI dense-field expansion per dataset volume.
+
+Not a ModelConfig — the BSI "arch" is the paper's kernel applied to the five
+registration volumes of paper Table 2.  The dry-run/roofline treat it as an
+extra architecture (``--arch bsi_paper``), lowering the dense-field expansion
+for each volume at the paper's default 5^3 tile plus the sweep tiles.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BsiWorkload:
+    name: str
+    volume: tuple      # voxels (paper Table 2)
+    tile: tuple = (5, 5, 5)
+    channels: int = 3
+    mode: str = "ttli"
+
+
+BSI_WORKLOADS = [
+    BsiWorkload("phantom1", (512, 228, 385)),
+    BsiWorkload("phantom2", (294, 130, 208)),
+    BsiWorkload("phantom3", (294, 130, 208)),
+    BsiWorkload("porcine1", (303, 167, 212)),
+    BsiWorkload("porcine2", (267, 169, 237)),
+]

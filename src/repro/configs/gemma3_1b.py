@@ -1,0 +1,21 @@
+"""gemma3-1b [dense] — [hf:google/gemma-3-1b-pt; unverified]."""
+from repro.configs.base import ModelConfig, register
+
+register(
+    ModelConfig(
+        name="gemma3-1b", family="dense",
+        num_layers=26, d_model=1152, num_heads=4, num_kv_heads=1,
+        d_ff=6912, vocab_size=262144, head_dim=256,
+        window=512, window_pattern=(1, 1, 1, 1, 1, 0),  # 5 local : 1 global
+        rope_theta=1e6,
+        source="[hf:google/gemma-3-1b-pt; unverified]",
+        notes="5:1 local:global sliding window (512); 128k context",
+    ),
+    smoke=ModelConfig(
+        name="gemma3-1b", family="dense",
+        num_layers=6, d_model=64, num_heads=4, num_kv_heads=1,
+        d_ff=128, vocab_size=512, head_dim=16,
+        window=8, window_pattern=(1, 1, 1, 1, 1, 0),
+        remat=False, loss_chunk=64, attn_q_chunk=32, attn_kv_chunk=32,
+    ),
+)

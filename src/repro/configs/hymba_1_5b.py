@@ -1,0 +1,26 @@
+"""hymba-1.5b [hybrid] — [arXiv:2411.13676; hf]."""
+from repro.configs.base import ModelConfig, register
+
+# full attention at the first, middle and last layers (Hymba paper), SWA rest
+_PATTERN = tuple(0 if i in (0, 15, 31) else 1 for i in range(32))
+
+register(
+    ModelConfig(
+        name="hymba-1.5b", family="hybrid",
+        num_layers=32, d_model=1600, num_heads=25, num_kv_heads=5,
+        d_ff=5504, vocab_size=32001, head_dim=64,
+        window=1024, window_pattern=_PATTERN,
+        ssm_state=16, mamba_expand=2, mamba_conv=4,
+        seq_parallel=False,  # measured: mamba's chunked scan re-gathers a
+                             # seq-sharded residual (EXPERIMENTS §Perf)
+        source="[arXiv:2411.13676; hf]",
+        notes="parallel attention + mamba heads per block; 3 full-attn layers",
+    ),
+    smoke=ModelConfig(
+        name="hymba-1.5b", family="hybrid",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=512, head_dim=16,
+        window=8, window_pattern=(0, 1), ssm_state=4,
+        remat=False, loss_chunk=64, attn_q_chunk=32, attn_kv_chunk=32,
+    ),
+)

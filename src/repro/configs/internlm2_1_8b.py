@@ -1,0 +1,18 @@
+"""internlm2-1.8b [dense] — [arXiv:2403.17297; hf]."""
+from repro.configs.base import ModelConfig, register
+
+register(
+    ModelConfig(
+        name="internlm2-1.8b", family="dense",
+        num_layers=24, d_model=2048, num_heads=16, num_kv_heads=8,
+        d_ff=8192, vocab_size=92544, head_dim=128,
+        source="[arXiv:2403.17297; hf]",
+        notes="GQA kv=8",
+    ),
+    smoke=ModelConfig(
+        name="internlm2-1.8b", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=512, head_dim=16,
+        remat=False, loss_chunk=64, attn_q_chunk=32, attn_kv_chunk=32,
+    ),
+)

@@ -1,0 +1,25 @@
+"""llama-3.2-vision-90b [vlm] — [hf:meta-llama/Llama-3.2-11B-Vision; unverified].
+
+"100L" realised as 20 groups of (4 self-attn + 1 gated cross-attn) layers =
+80 + 20, matching Meta's description.  The vision tower is a STUB per the
+assignment: ``input_specs`` supplies 1601 precomputed patch embeddings.
+"""
+from repro.configs.base import ModelConfig, register
+
+register(
+    ModelConfig(
+        name="llama-3.2-vision-90b", family="vlm",
+        num_layers=100, d_model=8192, num_heads=64, num_kv_heads=8,
+        d_ff=28672, vocab_size=128256, head_dim=128,
+        cross_attn_every=5, img_tokens=1601, rope_theta=5e5,
+        source="[hf:meta-llama/Llama-3.2-11B-Vision; unverified]",
+        notes="cross-attn image layers every 5th; patch embeddings stubbed",
+    ),
+    smoke=ModelConfig(
+        name="llama-3.2-vision-90b", family="vlm",
+        num_layers=4, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=512, head_dim=16,
+        cross_attn_every=2, img_tokens=16,
+        remat=False, loss_chunk=64, attn_q_chunk=32, attn_kv_chunk=32,
+    ),
+)

@@ -1,0 +1,19 @@
+"""qwen1.5-32b [dense] — [hf:Qwen/Qwen1.5-0.5B; hf]."""
+from repro.configs.base import ModelConfig, register
+
+register(
+    ModelConfig(
+        name="qwen1.5-32b", family="dense",
+        num_layers=64, d_model=5120, num_heads=40, num_kv_heads=40,
+        d_ff=27392, vocab_size=152064, head_dim=128,
+        qkv_bias=True, rope_theta=1e6,
+        source="[hf:Qwen/Qwen1.5-0.5B; hf]",
+        notes="QKV bias; MHA (kv=40)",
+    ),
+    smoke=ModelConfig(
+        name="qwen1.5-32b", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=512, head_dim=16, qkv_bias=True,
+        remat=False, loss_chunk=64, attn_q_chunk=32, attn_kv_chunk=32,
+    ),
+)

@@ -1,0 +1,20 @@
+"""qwen2-moe-a2.7b [moe] — [hf:Qwen/Qwen1.5-MoE-A2.7B; hf]."""
+from repro.configs.base import ModelConfig, register
+
+register(
+    ModelConfig(
+        name="qwen2-moe-a2.7b", family="moe",
+        num_layers=24, d_model=2048, num_heads=16, num_kv_heads=16,
+        d_ff=0, vocab_size=151936, head_dim=128,
+        num_experts=60, top_k=4, num_shared_experts=4, moe_d_ff=1408,
+        source="[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]",
+        notes="4 shared + 60 routed top-4; per-expert d_ff=1408",
+    ),
+    smoke=ModelConfig(
+        name="qwen2-moe-a2.7b", family="moe",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=0, vocab_size=512, head_dim=16,
+        num_experts=8, top_k=2, num_shared_experts=2, moe_d_ff=32,
+        remat=False, loss_chunk=64, attn_q_chunk=32, attn_kv_chunk=32,
+    ),
+)

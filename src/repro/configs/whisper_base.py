@@ -1,0 +1,27 @@
+"""whisper-base [audio encdec] — [arXiv:2212.04356; unverified].
+
+"6L" realised as 6 encoder + 6 decoder layers (whisper-base actual).  The
+conv frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings at seq/4 rate.
+"""
+from repro.configs.base import ModelConfig, register
+
+register(
+    ModelConfig(
+        name="whisper-base", family="encdec",
+        num_layers=12, encoder_layers=6,
+        d_model=512, num_heads=8, num_kv_heads=8,
+        d_ff=2048, vocab_size=51865, head_dim=64,
+        norm="layernorm", act="gelu",
+        source="[arXiv:2212.04356; unverified]",
+        notes="enc-dec; conv frontend stubbed (frame embeddings input)",
+    ),
+    smoke=ModelConfig(
+        name="whisper-base", family="encdec",
+        num_layers=4, encoder_layers=2,
+        d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=512, head_dim=16,
+        norm="layernorm", act="gelu",
+        remat=False, loss_chunk=64, attn_q_chunk=32, attn_kv_chunk=32,
+    ),
+)

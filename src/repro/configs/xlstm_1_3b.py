@@ -1,0 +1,20 @@
+"""xlstm-1.3b [ssm] — [arXiv:2405.04517; unverified]."""
+from repro.configs.base import ModelConfig, register
+
+register(
+    ModelConfig(
+        name="xlstm-1.3b", family="ssm",
+        num_layers=48, d_model=2048, num_heads=4, num_kv_heads=4,
+        d_ff=0, vocab_size=50304,
+        slstm_every=8,
+        remat_policy="dots",  # measured: recurrent/expert recompute under "nothing" costs more HBM traffic than dot saves (EXPERIMENTS §Perf)   # xLSTM[7:1]: 7 mLSTM blocks then 1 sLSTM per group
+        source="[arXiv:2405.04517; unverified]",
+        notes="mLSTM (chunked-parallel) + sLSTM (sequential scan); d_ff=0",
+    ),
+    smoke=ModelConfig(
+        name="xlstm-1.3b", family="ssm",
+        num_layers=4, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=0, vocab_size=512, slstm_every=2,
+        remat=False, loss_chunk=64,
+    ),
+)

@@ -1,0 +1,94 @@
+"""Cubic B-spline basis functions and the aligned-grid weight LUTs.
+
+Conventions (shared by every BSI implementation in this repo)
+-------------------------------------------------------------
+* A volume of ``T`` tiles per axis with tile size ``delta`` has ``T * delta``
+  voxels per axis.
+* The control grid is *voxel aligned and uniformly spaced* (the NiftyReg
+  convention the paper assumes, §3.4): voxel ``x = t*delta + a`` has
+  fractional coordinate ``u = a/delta`` and base index ``i = t - 1``.
+* Control grids are stored with a +1 index offset so that tile ``t`` reads
+  stored points ``[t, t+4)``; a grid of ``T`` tiles therefore stores
+  ``T + 3`` points per axis.
+* Because the grid is aligned, ``u`` takes only ``delta`` distinct values per
+  axis -> all weights live in a ``(delta, 4)`` look-up table (paper §3.4
+  stores these in constant memory; we pass them as tiny operands).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "bspline_basis",
+    "weight_lut",
+    "lerp_luts",
+    "grid_points_for_tiles",
+]
+
+
+def bspline_basis(u, dtype=jnp.float32):
+    """The four cubic B-spline basis values ``B_0..B_3`` at parameter ``u``.
+
+    Returns an array of shape ``u.shape + (4,)``.  The basis is a partition of
+    unity: ``sum_l B_l(u) == 1`` for all ``u`` — several reformulations below
+    (and the TTLI lerp form) rely on this.
+    """
+    u = jnp.asarray(u, dtype)
+    one = jnp.asarray(1.0, dtype)
+    b0 = (one - u) ** 3 / 6.0
+    b1 = (3.0 * u**3 - 6.0 * u**2 + 4.0) / 6.0
+    b2 = (-3.0 * u**3 + 3.0 * u**2 + 3.0 * u + 1.0) / 6.0
+    b3 = u**3 / 6.0
+    return jnp.stack([b0, b1, b2, b3], axis=-1)
+
+
+@functools.lru_cache(maxsize=None)
+def _weight_lut_np(delta: int, dtype_name: str) -> np.ndarray:
+    # Computed in float64 then cast: the LUT is tiny and shared by every
+    # voxel, so we do not let LUT rounding contribute to the error budget.
+    u = np.arange(delta, dtype=np.float64) / float(delta)
+    b0 = (1.0 - u) ** 3 / 6.0
+    b1 = (3.0 * u**3 - 6.0 * u**2 + 4.0) / 6.0
+    b2 = (-3.0 * u**3 + 3.0 * u**2 + 3.0 * u + 1.0) / 6.0
+    b3 = u**3 / 6.0
+    return np.stack([b0, b1, b2, b3], axis=-1).astype(dtype_name)
+
+
+def weight_lut(delta: int, dtype=jnp.float32):
+    """``(delta, 4)`` aligned-grid weight LUT: ``W[a, l] = B_l(a / delta)``."""
+    return jnp.asarray(_weight_lut_np(int(delta), jnp.dtype(dtype).name))
+
+
+@functools.lru_cache(maxsize=None)
+def _lerp_luts_np(delta: int, dtype_name: str):
+    w = _weight_lut_np(delta, "float64")
+    b0, b1, b2, b3 = w[:, 0], w[:, 1], w[:, 2], w[:, 3]
+    # Pairwise renormalisation (paper §3.3): B0*p0 + B1*p1 ==
+    # (B0+B1) * lerp(p0, p1, B1/(B0+B1)).  Partition of unity makes the final
+    # combine a lerp too: (B0+B1) + (B2+B3) == 1.
+    t0 = b1 / (b0 + b1)
+    t1 = b3 / (b2 + b3)
+    s = b2 + b3
+    return tuple(a.astype(dtype_name) for a in (t0, t1, s))
+
+
+def lerp_luts(delta: int, dtype=jnp.float32):
+    """LUTs for the TTLI lerp form, each of shape ``(delta,)``.
+
+    ``t0[a] = B1/(B0+B1)``, ``t1[a] = B3/(B2+B3)``, ``s[a] = B2+B3`` so that
+
+        sum_l B_l(u_a) * p_l == lerp(lerp(p0,p1,t0), lerp(p2,p3,t1), s)
+
+    which is 3 lerps (6 FMA-class ops) per axis level — the exact regrouping
+    of paper App. B (63 lerps = 126 ops per voxel in 3-D).
+    """
+    t0, t1, s = _lerp_luts_np(int(delta), jnp.dtype(dtype).name)
+    return jnp.asarray(t0), jnp.asarray(t1), jnp.asarray(s)
+
+
+def grid_points_for_tiles(num_tiles) -> tuple:
+    """Stored control-grid points per axis for ``num_tiles`` tiles (+3 halo)."""
+    return tuple(int(t) + 3 for t in num_tiles)

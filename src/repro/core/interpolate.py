@@ -1,0 +1,186 @@
+"""B-spline interpolation — public API and the jnp-level algorithm forms.
+
+Three algorithmic forms of paper Eq. (1), mirroring the paper's comparison
+matrix (§5), plus a mode dispatcher.  Each form exists twice in the repo:
+
+* here as a pure-jnp implementation — these are the *CPU analogs* (the paper's
+  Fig. 7 VT/VV role) and the reference semantics;
+* in ``repro.kernels`` as a Pallas TPU kernel with explicit VMEM tiling
+  (``bsi_tt``, ``bsi_ttli``, ``bsi_separable``) — the paper's GPU kernels,
+  adapted to TPU (DESIGN.md §2).
+
+Forms
+-----
+``gather``      thread-per-voxel analog (NiftyReg-TV baseline): every voxel
+                gathers its 64 control points and weight-sums them.  Maximal
+                redundant data movement — the paper's comparison baseline.
+``tt``          thread-per-tile: tile-shared slices of the control grid are
+                broadcast over the tile's voxels; 64 FMA accumulation steps.
+``ttli``        tt + the trilinear/lerp reformulation (126 ops/voxel vs 255).
+``separable``   beyond-paper tensor-contraction form: the per-tile sum is a
+                Tucker contraction -> three small matmuls (MXU-friendly),
+                ~(4/d + 4/d^2 + 4/d^3) MACs/voxel instead of 64.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bspline import lerp_luts, weight_lut
+
+__all__ = ["bsi_gather", "bsi_tt", "bsi_ttli", "bsi_separable", "interpolate", "MODES"]
+
+
+def _dims(phi, tile):
+    dx, dy, dz = (int(t) for t in tile)
+    tx, ty, tz = (int(n) - 3 for n in phi.shape[:3])
+    if min(tx, ty, tz) < 1:
+        raise ValueError(f"control grid {phi.shape} too small for any tile")
+    return (dx, dy, dz), (tx, ty, tz), phi.shape[3]
+
+
+def bsi_gather(phi, tile, dtype=None):
+    """Thread-per-voxel analog: per-voxel 64-point gather + weighted sum."""
+    dtype = dtype or phi.dtype
+    phi = jnp.asarray(phi, dtype)
+    (dx, dy, dz), (tx, ty, tz), _ = _dims(phi, tile)
+    wx, wy, wz = (weight_lut(d, dtype) for d in (dx, dy, dz))
+
+    x = jnp.arange(tx * dx)
+    y = jnp.arange(ty * dy)
+    z = jnp.arange(tz * dz)
+    bx, ax = x // dx, x % dx
+    by, ay = y // dy, y % dy
+    bz, az = z // dz, z % dz
+
+    out = jnp.zeros((tx * dx, ty * dy, tz * dz, phi.shape[3]), dtype)
+    for l in range(4):
+        for m in range(4):
+            for n in range(4):
+                g = phi[bx[:, None, None] + l, by[None, :, None] + m, bz[None, None, :] + n]
+                w = (
+                    wx[ax, l][:, None, None]
+                    * wy[ay, m][None, :, None]
+                    * wz[az, n][None, None, :]
+                )
+                out = out + g * w[..., None]
+    return out
+
+
+def bsi_tt(phi, tile, dtype=None):
+    """Thread-per-tile form: tile-shared control-point slices, 64 FMA steps."""
+    dtype = dtype or phi.dtype
+    phi = jnp.asarray(phi, dtype)
+    (dx, dy, dz), (tx, ty, tz), c = _dims(phi, tile)
+    wx, wy, wz = (weight_lut(d, dtype) for d in (dx, dy, dz))
+
+    out = jnp.zeros((tx, dx, ty, dy, tz, dz, c), dtype)
+    for l in range(4):
+        for m in range(4):
+            for n in range(4):
+                sl = phi[l : l + tx, m : m + ty, n : n + tz]  # shared by the whole tile
+                w = (
+                    wx[:, l][:, None, None] * wy[:, m][None, :, None] * wz[:, n][None, None, :]
+                ).reshape(1, dx, 1, dy, 1, dz, 1)
+                out = out + sl[:, None, :, None, :, None, :] * w
+    return out.reshape(tx * dx, ty * dy, tz * dz, c)
+
+
+def _lerp(a, b, t):
+    return a + t * (b - a)
+
+
+def bsi_ttli(phi, tile, dtype=None):
+    """TT + trilinear/lerp reformulation (paper §3.3, App. B).
+
+    Axis-staged pairwise lerps: 3 lerps collapse the 4 x-neighbours, then y,
+    then z — 63 lerps (126 FMA-class ops) per voxel, the same DAG as the
+    paper's 8 sub-cubes + 1 final cube regrouping.
+    """
+    dtype = dtype or phi.dtype
+    phi = jnp.asarray(phi, dtype)
+    (dx, dy, dz), (tx, ty, tz), c = _dims(phi, tile)
+    t0x, t1x, sx = lerp_luts(dx, dtype)
+    t0y, t1y, sy = lerp_luts(dy, dtype)
+    t0z, t1z, sz = lerp_luts(dz, dtype)
+
+    # x stage: (tx+3, Y, Z, C) -> (tx, dx, Y, Z, C)
+    f = [phi[l : l + tx] for l in range(4)]
+    r = lambda t: t[None, :, None, None, None]  # broadcast LUT over (tile, a, ...)
+    h01 = _lerp(f[0][:, None], f[1][:, None], r(t0x))
+    h23 = _lerp(f[2][:, None], f[3][:, None], r(t1x))
+    hx = _lerp(h01, h23, r(sx))
+    hx = hx.reshape(tx * dx, ty + 3, tz + 3, c)
+
+    # y stage: (X, ty+3, Z, C) -> (X, ty, dy, Z, C)
+    f = [hx[:, m : m + ty] for m in range(4)]
+    r = lambda t: t[None, None, :, None, None]
+    h01 = _lerp(f[0][:, :, None], f[1][:, :, None], r(t0y))
+    h23 = _lerp(f[2][:, :, None], f[3][:, :, None], r(t1y))
+    hy = _lerp(h01, h23, r(sy))
+    hy = hy.reshape(tx * dx, ty * dy, tz + 3, c)
+
+    # z stage
+    f = [hy[:, :, n : n + tz] for n in range(4)]
+    r = lambda t: t[None, None, None, :, None]
+    h01 = _lerp(f[0][:, :, :, None], f[1][:, :, :, None], r(t0z))
+    h23 = _lerp(f[2][:, :, :, None], f[3][:, :, :, None], r(t1z))
+    hz = _lerp(h01, h23, r(sz))
+    return hz.reshape(tx * dx, ty * dy, tz * dz, c)
+
+
+def bsi_separable(phi, tile, dtype=None):
+    """Beyond-paper separable form: three per-axis tensor contractions."""
+    dtype = dtype or phi.dtype
+    phi = jnp.asarray(phi, dtype)
+    (dx, dy, dz), (tx, ty, tz), c = _dims(phi, tile)
+    wx, wy, wz = (weight_lut(d, dtype) for d in (dx, dy, dz))
+
+    # x sweep: out[t, a, ...] = sum_l Wx[a, l] * phi[t + l, ...]
+    px = jnp.stack([phi[l : l + tx] for l in range(4)])  # (4, tx, Y, Z, C)
+    hx = jnp.einsum("al,ltyzc->tayzc", wx, px).reshape(tx * dx, ty + 3, tz + 3, c)
+    py = jnp.stack([hx[:, m : m + ty] for m in range(4)])  # (4, X, ty, Z, C)
+    hy = jnp.einsum("bm,mxtzc->xtbzc", wy, py).reshape(tx * dx, ty * dy, tz + 3, c)
+    pz = jnp.stack([hy[:, :, n : n + tz] for n in range(4)])  # (4, X, Y, tz, C)
+    hz = jnp.einsum("cn,nxytk->xytck", wz, pz)
+    return hz.reshape(tx * dx, ty * dy, tz * dz, c)
+
+
+MODES = {
+    "gather": bsi_gather,
+    "tt": bsi_tt,
+    "ttli": bsi_ttli,
+    "separable": bsi_separable,
+}
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "mode", "impl", "dtype_name"))
+def _interpolate_jit(phi, tile, mode, impl, dtype_name):
+    dtype = jnp.dtype(dtype_name) if dtype_name else None
+    if impl == "jnp":
+        return MODES[mode](phi, tile, dtype)
+    if impl == "pallas":
+        from repro.kernels import ops  # local import: kernels import this module
+
+        return ops.bsi_pallas(phi, tile, mode=mode, dtype=dtype)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def interpolate(phi, tile, *, mode="separable", impl="jnp", dtype=None):
+    """Interpolate a control grid to a dense field.
+
+    Args:
+      phi: ``(Tx+3, Ty+3, Tz+3, C)`` control grid (aligned, +1 offset).
+      tile: ``(dx, dy, dz)`` control-point spacing in voxels.
+      mode: one of ``gather | tt | ttli | separable``.
+      impl: ``jnp`` (XLA-fused reference forms) or ``pallas`` (TPU kernels;
+        runs under ``interpret=True`` on CPU).
+    Returns:
+      ``(Tx*dx, Ty*dy, Tz*dz, C)`` dense field.
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; choose from {sorted(MODES)}")
+    name = jnp.dtype(dtype).name if dtype is not None else None
+    return _interpolate_jit(phi, tuple(int(t) for t in tile), mode, impl, name)

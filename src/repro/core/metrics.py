@@ -1,0 +1,52 @@
+"""Similarity metrics used by registration and its evaluation (paper §6-7)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["ssd", "mae", "ncc", "ssim"]
+
+
+def ssd(a, b):
+    return jnp.mean((a - b) ** 2)
+
+
+def mae(a, b):
+    """Mean absolute error on normalised intensities (paper Table 5)."""
+    return jnp.mean(jnp.abs(_norm(a) - _norm(b)))
+
+
+def _norm(x):
+    lo, hi = jnp.min(x), jnp.max(x)
+    return (x - lo) / jnp.maximum(hi - lo, 1e-8)
+
+
+def ncc(a, b):
+    a = a - jnp.mean(a)
+    b = b - jnp.mean(b)
+    return jnp.sum(a * b) / jnp.maximum(
+        jnp.sqrt(jnp.sum(a**2) * jnp.sum(b**2)), 1e-8
+    )
+
+
+def _uniform_filter(x, size):
+    w = jnp.ones((size,) * 3, x.dtype) / size**3
+    return lax.conv_general_dilated(
+        x[None, None], w[None, None], (1, 1, 1), "VALID",
+        dimension_numbers=("NCXYZ", "OIXYZ", "NCXYZ"),
+    )[0, 0]
+
+
+def ssim(a, b, *, window=7, k1=0.01, k2=0.03):
+    """Structured Similarity Index (3-D, uniform window — paper Table 5)."""
+    a, b = _norm(a), _norm(b)
+    c1, c2 = k1**2, k2**2
+    mu_a = _uniform_filter(a, window)
+    mu_b = _uniform_filter(b, window)
+    aa = _uniform_filter(a * a, window) - mu_a**2
+    bb = _uniform_filter(b * b, window) - mu_b**2
+    ab = _uniform_filter(a * b, window) - mu_a * mu_b
+    s = ((2 * mu_a * mu_b + c1) * (2 * ab + c2)) / (
+        (mu_a**2 + mu_b**2 + c1) * (aa + bb + c2)
+    )
+    return jnp.mean(s)

@@ -1,0 +1,82 @@
+"""Non-uniform / non-aligned control grids — the paper's §8 future work.
+
+The paper's implementations require the control grid to be voxel-aligned
+and uniformly spaced (integer tile sizes), which makes every per-axis
+weight a LUT entry.  The paper notes: "Support for non-uniform grids is
+possible with minimal changes (e.g., calculating B-spline basis functions
+weights on-the-fly). We leave this support for future work."
+
+This module is that support: arbitrary *fractional* spacing per axis (and
+therefore arbitrary real-valued control-point pitch).  Weights are computed
+on the fly per voxel (``bspline_basis``), with the same separable structure
+as the aligned fast path wherever the problem remains separable — spacing
+is per-axis, so the weight tensor factorises into three (len, 4) matrices
+even when nothing is integer:
+
+    out[x, y, z] = sum_{l,m,n} Wx[x,l] * Wy[y,m] * Wz[z,n]
+                               * phi[ix[x]+l, iy[y]+m, iz[z]+n]
+
+The gather is per-voxel (base indices differ), but each axis's (index,
+weight) pair is precomputed once per axis — O(len·4) setup, not O(vox·64).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bspline import bspline_basis
+
+__all__ = ["axis_weights", "bsi_nonuniform", "grid_points_for_spacing"]
+
+
+def grid_points_for_spacing(vol_shape, spacing) -> tuple:
+    """Stored control points per axis for real-valued ``spacing``."""
+    return tuple(int(jnp.ceil(s / d)) + 3 for s, d in zip(vol_shape, spacing))
+
+
+def axis_weights(length, delta, dtype=jnp.float32):
+    """Per-axis base indices and on-the-fly weights for spacing ``delta``.
+
+    Returns (idx (len,), W (len, 4)) with idx the stored base control point
+    (+1 offset convention) and W the four basis values at each coordinate.
+    """
+    x = jnp.arange(length, dtype=jnp.float32) / jnp.asarray(delta, jnp.float32)
+    base = jnp.floor(x)
+    u = x - base
+    return base.astype(jnp.int32), bspline_basis(u, dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("vol_shape",))
+def bsi_nonuniform(phi, spacing, vol_shape):
+    """Dense field from a control grid at arbitrary real spacing.
+
+    Args:
+      phi: ``(nx, ny, nz, C)`` stored control grid (+1 offset convention).
+      spacing: 3 floats (voxels per control interval, need not be integer).
+      vol_shape: output volume shape.
+
+    Returns ``vol_shape + (C,)``.
+    """
+    X, Y, Z = vol_shape
+    ix, wx = axis_weights(X, spacing[0], phi.dtype)
+    iy, wy = axis_weights(Y, spacing[1], phi.dtype)
+    iz, wz = axis_weights(Z, spacing[2], phi.dtype)
+
+    nx, ny, nz = phi.shape[:3]
+    out = jnp.zeros((X, Y, Z, phi.shape[-1]), phi.dtype)
+    # separable in weights; gather per (l, m, n) shift — 64 terms like the
+    # aligned gather form, but with per-voxel bases.
+    for l in range(4):
+        gx = jnp.clip(ix + l, 0, nx - 1)
+        for m in range(4):
+            gy = jnp.clip(iy + m, 0, ny - 1)
+            for n in range(4):
+                gz = jnp.clip(iz + n, 0, nz - 1)
+                g = phi[gx[:, None, None], gy[None, :, None], gz[None, None, :]]
+                w = (wx[:, l][:, None, None]
+                     * wy[:, m][None, :, None]
+                     * wz[:, n][None, None, :])
+                out = out + g * w[..., None]
+    return out

@@ -1,0 +1,74 @@
+"""Deterministic, resumable, sharded synthetic token pipeline.
+
+Production posture (DESIGN.md §5): each host generates only its shard of
+the global batch (``host_id``/``num_hosts``), batches are a pure function
+of ``(seed, step)`` so *any* host can regenerate *any* step — which makes
+the pipeline trivially resumable after preemption (state = one integer)
+and immune to data-order divergence across restarts.  The token stream is
+a mixture of Zipf-distributed unigrams and short Markov motifs so the loss
+has learnable structure (used by the e2e example to show loss descent).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+__all__ = ["PipelineConfig", "TokenPipeline"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_id: int = 0
+    num_hosts: int = 1
+    n_motifs: int = 64
+    motif_len: int = 8
+
+
+class TokenPipeline:
+    def __init__(self, cfg: PipelineConfig):
+        assert cfg.global_batch % cfg.num_hosts == 0
+        self.cfg = cfg
+        self.local_batch = cfg.global_batch // cfg.num_hosts
+        rng = np.random.default_rng(cfg.seed)
+        # fixed motif table (shared across hosts: same seed)
+        self.motifs = rng.integers(
+            0, cfg.vocab_size, (cfg.n_motifs, cfg.motif_len), dtype=np.int32
+        )
+        # Zipf-ish unigram distribution
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        p = 1.0 / ranks**1.1
+        self.unigram = p / p.sum()
+
+    def state(self, step: int) -> dict:
+        return {"step": int(step), "seed": self.cfg.seed}
+
+    def batch_at(self, step: int) -> dict:
+        """The (host-local) batch for ``step`` — pure function of inputs."""
+        c = self.cfg
+        rng = np.random.default_rng(
+            (c.seed * 1_000_003 + step) * 4096 + c.host_id
+        )
+        toks = rng.choice(
+            c.vocab_size, size=(self.local_batch, c.seq_len + 1),
+            p=self.unigram,
+        ).astype(np.int32)
+        # plant motifs: ~25% of positions covered by copyable structure
+        n_plant = (self.local_batch * (c.seq_len + 1)) // (4 * c.motif_len)
+        rows = rng.integers(0, self.local_batch, n_plant)
+        cols = rng.integers(0, c.seq_len + 1 - c.motif_len, n_plant)
+        ids = rng.integers(0, c.n_motifs, n_plant)
+        for r, col, i in zip(rows, cols, ids):
+            toks[r, col : col + c.motif_len] = self.motifs[i]
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

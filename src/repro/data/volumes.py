@@ -1,0 +1,78 @@
+"""Synthetic pre-clinical volume generator (stand-in for the paper's dataset).
+
+The paper's dataset (Mendeley, liver phantom DynaCT + porcine MRI) is not
+shipped offline, so we synthesise anatomically-flavoured volumes with the same
+*structure* the evaluation needs: a smooth parenchyma blob, tumour spheres and
+vessel tubes (paper §4), plus a known smooth non-rigid deformation ("pneumo-
+peritoneum") to create registration pairs.  Shapes default to scaled-down
+versions of paper Table 2; the exact table shapes are available via
+``PAPER_VOLUMES`` for the dry-run / roofline path (no allocation needed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ffd
+
+__all__ = ["PAPER_VOLUMES", "make_phantom", "make_pair"]
+
+# Paper Table 2: registration pair -> resolution (voxels).
+PAPER_VOLUMES = {
+    "phantom1": (512, 228, 385),
+    "phantom2": (294, 130, 208),
+    "phantom3": (294, 130, 208),
+    "porcine1": (303, 167, 212),
+    "porcine2": (267, 169, 237),
+}
+
+
+def make_phantom(shape=(72, 64, 56), *, n_tumors=5, n_vessels=3, seed=0):
+    """Liver-phantom-like volume: ellipsoid parenchyma + tumours + vessels."""
+    rng = np.random.default_rng(seed)
+    X, Y, Z = shape
+    xs, ys, zs = np.meshgrid(
+        np.linspace(-1, 1, X), np.linspace(-1, 1, Y), np.linspace(-1, 1, Z),
+        indexing="ij",
+    )
+    # parenchyma: soft ellipsoid with a lobed boundary
+    r2 = (xs / 0.8) ** 2 + (ys / 0.7) ** 2 + (zs / 0.75) ** 2
+    lobes = 0.12 * np.sin(3 * xs + 1.0) * np.cos(2 * ys)
+    vol = 0.55 * (1.0 / (1.0 + np.exp(40 * (r2 - 0.8 + lobes))))
+    # tumours: bright spheres inside the parenchyma
+    for _ in range(n_tumors):
+        c = rng.uniform(-0.45, 0.45, 3)
+        rad = rng.uniform(0.06, 0.14)
+        d2 = (xs - c[0]) ** 2 + (ys - c[1]) ** 2 + (zs - c[2]) ** 2
+        vol += 0.35 * np.exp(-d2 / (2 * rad**2))
+    # vessels: bright tubes along random directions
+    for _ in range(n_vessels):
+        p = rng.uniform(-0.35, 0.35, 3)
+        d = rng.standard_normal(3)
+        d /= np.linalg.norm(d)
+        rel = np.stack([xs - p[0], ys - p[1], zs - p[2]], -1)
+        t = rel @ d
+        closest = rel - t[..., None] * d
+        dist2 = (closest**2).sum(-1)
+        vol += 0.25 * np.exp(-dist2 / (2 * 0.03**2)) * (np.abs(t) < 0.6)
+    vol += rng.normal(0.0, 0.01, vol.shape)  # acquisition noise
+    return jnp.asarray(np.clip(vol, 0.0, 1.0), jnp.float32)
+
+
+def make_pair(shape=(72, 64, 56), *, tile=(6, 6, 6), magnitude=2.5, seed=0):
+    """A (fixed, moving) registration pair with a known FFD deformation.
+
+    The *fixed* volume is the phantom; the *moving* volume is the phantom
+    warped by a random smooth control grid (the synthetic pneumoperitoneum),
+    i.e. ground-truth recoverable by FFD registration.
+    """
+    fixed = make_phantom(shape, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    gshape = ffd.grid_shape_for_volume(shape, tile)
+    phi_true = jnp.asarray(
+        rng.normal(0.0, magnitude, gshape + (3,)), jnp.float32
+    )
+    disp = ffd.dense_field(phi_true, tile, shape)
+    moving = ffd.warp_volume(fixed, disp)
+    return fixed, moving, phi_true

@@ -1,0 +1,82 @@
+"""Separable (tensor-contraction) BSI Pallas kernel — beyond the paper.
+
+The aligned-grid weighted sum is a Tucker contraction:
+
+    out[a,b,c] = sum_{l,m,n} Wx[a,l] * Wy[b,m] * Wz[c,n] * phi[l,m,n]
+
+so instead of 64 MACs per voxel (TT) or 63 lerps (TTLI), three per-axis
+sweeps cost ``4 + 16/d + 64/d^2`` MACs per voxel — for the default 5^3 tile
+**1220 MACs per 125-voxel tile vs 8000** (6.6x fewer FLOPs, ->16x as d grows).
+Each sweep is a small ``dot_general`` that XLA/Mosaic places on the MXU.
+This is the paper's operand-regrouping idea pushed to its limit on a
+systolic-array machine (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+__all__ = ["bsi_separable_pallas"]
+
+
+def _kernel(wx_ref, wy_ref, wz_ref, phi_ref, out_ref, *, tile, block_tiles):
+    dx, dy, dz = tile
+    bx, by, bz = block_tiles
+    c = out_ref.shape[-1]
+    win = common.phi_window(phi_ref, block_tiles)  # (bx+3, by+3, bz+3, C)
+    wx = wx_ref[...]
+    wy = wy_ref[...]
+    wz = wz_ref[...]
+
+    # x sweep: (4, bx, Y, Z, C) x (dx, 4) -> (bx, dx, Y, Z, C)
+    px = jnp.stack([win[l : l + bx] for l in range(4)])
+    h = jax.lax.dot_general(
+        wx, px.reshape(4, -1), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(dx, bx, by + 3, bz + 3, c)
+    h = jnp.moveaxis(h, 0, 1).reshape(bx * dx, by + 3, bz + 3, c)
+    # y sweep
+    py = jnp.stack([h[:, m : m + by] for m in range(4)])
+    h = jax.lax.dot_general(
+        wy, py.reshape(4, -1), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(dy, bx * dx, by, bz + 3, c)
+    h = jnp.moveaxis(h, 0, 2).reshape(bx * dx, by * dy, bz + 3, c)
+    # z sweep
+    pz = jnp.stack([h[:, :, n : n + bz] for n in range(4)])
+    h = jax.lax.dot_general(
+        wz, pz.reshape(4, -1), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(dz, bx * dx, by * dy, bz, c)
+    h = jnp.moveaxis(h, 0, 3).reshape(bx * dx, by * dy, bz * dz, c)
+    out_ref[...] = h.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "block_tiles", "interpret"))
+def bsi_separable_pallas(phi, wx, wy, wz, *, tile, block_tiles, interpret=True):
+    tx, ty, tz = (int(n) - 3 for n in phi.shape[:3])
+    c = phi.shape[3]
+    bx, by, bz = block_tiles
+    assert tx % bx == 0 and ty % by == 0 and tz % bz == 0, (phi.shape, block_tiles)
+    grid = (tx // bx, ty // by, tz // bz)
+    out_shape = jax.ShapeDtypeStruct(
+        (tx * tile[0], ty * tile[1], tz * tile[2], c), phi.dtype
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, tile=tile, block_tiles=block_tiles),
+        grid=grid,
+        in_specs=[
+            common.lut_spec(wx.shape),
+            common.lut_spec(wy.shape),
+            common.lut_spec(wz.shape),
+            common.full_grid_spec(phi.shape),
+        ],
+        out_specs=common.out_spec(block_tiles, tile, c),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(wx, wy, wz, phi)

@@ -1,0 +1,51 @@
+"""Shared plumbing for the BSI Pallas kernels.
+
+TPU mapping of the paper's Thread-per-Tile scheme (DESIGN.md §2):
+
+* the control grid (small: ``vol/delta^3`` points) is VMEM-resident — one
+  HBM->VMEM load total, the analogue of the paper's global->shared staging;
+* each Pallas grid cell owns a *block of tiles* and reads its
+  ``(bt+3)^3`` halo window from VMEM — the analogue of the paper's
+  per-thread register tile, with the ``(4+l-1)(4+m-1)(4+n-1)`` overlap
+  saving of paper Eq. (A.4);
+* the dense output (the big array) is written exactly once, blocked.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["phi_window", "out_block_shape", "full_grid_spec", "lut_spec", "out_spec"]
+
+
+def phi_window(phi_ref, block_tiles):
+    """Slice this grid cell's (bt+3)^3 halo window out of the VMEM grid."""
+    bx, by, bz = block_tiles
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+    return phi_ref[
+        pl.ds(i * bx, bx + 3), pl.ds(j * by, by + 3), pl.ds(k * bz, bz + 3), :
+    ]
+
+
+def out_block_shape(block_tiles, tile, channels):
+    bx, by, bz = block_tiles
+    dx, dy, dz = tile
+    return (bx * dx, by * dy, bz * dz, channels)
+
+
+def full_grid_spec(shape):
+    """BlockSpec pinning the full control grid in VMEM for every grid cell."""
+    return pl.BlockSpec(shape, lambda i, j, k: (0, 0, 0, 0))
+
+
+def lut_spec(shape):
+    nd = len(shape)
+    return pl.BlockSpec(shape, lambda i, j, k: (0,) * nd)
+
+
+def out_spec(block_tiles, tile, channels):
+    return pl.BlockSpec(
+        out_block_shape(block_tiles, tile, channels), lambda i, j, k: (i, j, k, 0)
+    )

@@ -1,0 +1,90 @@
+"""Jit'd dispatch wrappers for the BSI Pallas kernels.
+
+Handles the plumbing the kernels don't: LUT construction, padding the tile
+count up to a block multiple (padded control points never reach the cropped
+output), block-size selection under the VMEM budget, and z-chunking when a
+control grid exceeds VMEM (the rare >16 MB grid case; the chunk halo is the
+level-2 instance of the paper's Eq. A.4 overlap scheme).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bspline import lerp_luts, weight_lut
+from repro.kernels.bsi_separable import bsi_separable_pallas
+from repro.kernels.bsi_tt import bsi_tt_pallas
+from repro.kernels.bsi_ttli import bsi_ttli_pallas
+
+__all__ = ["bsi_pallas", "pick_block_tiles"]
+
+# Budget for (control grid + out block + window temporaries) in VMEM.
+_VMEM_BUDGET_BYTES = 12 * 2**20
+_DEFAULT_BLOCK_TILES = (4, 4, 4)  # cubes maximise halo overlap (paper §3.4)
+
+
+def pick_block_tiles(num_tiles, tile, channels, itemsize, budget=_VMEM_BUDGET_BYTES):
+    """Pick a tile-block shape: cube-ish, bounded by the VMEM budget."""
+    bt = list(_DEFAULT_BLOCK_TILES)
+    while True:
+        out_bytes = (
+            bt[0] * tile[0] * bt[1] * tile[1] * bt[2] * tile[2] * channels * itemsize
+        )
+        win_bytes = (bt[0] + 3) * (bt[1] + 3) * (bt[2] + 3) * channels * itemsize
+        if out_bytes + 8 * win_bytes < budget // 2 or max(bt) == 1:
+            return tuple(bt)
+        bt[bt.index(max(bt))] = max(1, max(bt) // 2)
+
+
+def _pad_tiles(phi, num_tiles, block_tiles):
+    pads = []
+    for t, b in zip(num_tiles, block_tiles):
+        pads.append((0, (-t) % b))
+    pads.append((0, 0))
+    if any(p[1] for p in pads):
+        phi = jnp.pad(phi, pads)
+    return phi, tuple(t + p[1] for t, p in zip(num_tiles, pads))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "mode", "dtype", "block_tiles", "interpret")
+)
+def bsi_pallas(phi, tile, *, mode="ttli", dtype=None, block_tiles=None, interpret=True):
+    """Run one of the BSI Pallas kernels on a stored control grid.
+
+    Args match ``repro.core.interpolate.interpolate``; ``mode`` selects the
+    kernel (``tt`` | ``ttli`` | ``separable``; ``gather`` has no kernel — it
+    is the baseline the kernels beat).
+    """
+    if dtype is not None:
+        phi = phi.astype(dtype)
+    tile = tuple(int(t) for t in tile)
+    num_tiles = tuple(int(n) - 3 for n in phi.shape[:3])
+    c = phi.shape[3]
+    if block_tiles is None:
+        block_tiles = pick_block_tiles(num_tiles, tile, c, phi.dtype.itemsize)
+    block_tiles = tuple(min(b, t) for b, t in zip(block_tiles, num_tiles))
+    phi_p, padded_tiles = _pad_tiles(phi, num_tiles, block_tiles)
+
+    if mode == "tt":
+        luts = tuple(weight_lut(d, phi.dtype) for d in tile)
+        out = bsi_tt_pallas(
+            phi_p, *luts, tile=tile, block_tiles=block_tiles, interpret=interpret
+        )
+    elif mode == "ttli":
+        luts = tuple(jnp.stack(lerp_luts(d, phi.dtype)) for d in tile)
+        out = bsi_ttli_pallas(
+            phi_p, *luts, tile=tile, block_tiles=block_tiles, interpret=interpret
+        )
+    elif mode == "separable":
+        luts = tuple(weight_lut(d, phi.dtype) for d in tile)
+        out = bsi_separable_pallas(
+            phi_p, *luts, tile=tile, block_tiles=block_tiles, interpret=interpret
+        )
+    else:
+        raise ValueError(f"no Pallas kernel for mode {mode!r}")
+    return out[
+        : num_tiles[0] * tile[0], : num_tiles[1] * tile[1], : num_tiles[2] * tile[2]
+    ]

@@ -1,0 +1,242 @@
+# The dry-run needs 512 placeholder devices; jax locks the device count on
+# first init, so these two lines MUST precede every other import.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent without real
+hardware: ``jax.jit(step).lower(...).compile()`` must succeed on the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh, with full-size parameters /
+caches as ShapeDtypeStructs (nothing is allocated).  Records
+``memory_analysis`` (fits?), ``cost_analysis`` (FLOPs/bytes) and the
+collective-bytes HLO parse for §Roofline into results/dryrun/*.json.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh pod|multipod]
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import (
+    SHAPES, cell_supported, get_config, input_specs, list_configs,
+)
+from repro.distributed.sharding import (
+    DECODE_RULES, LONG_CONTEXT_RULES, TRAIN_RULES, partition_specs,
+    sanitize_specs, shardings_for,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.roofline import model_flops, roofline_terms
+from repro.models import model as M
+from repro.optim.optimizer import OptConfig
+from repro.training.steps import abstract_train_state, make_decode_step, \
+    make_prefill_step, make_train_step
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+LM_ARCHS = [
+    "qwen1.5-32b", "gemma3-1b", "gemma2-2b", "internlm2-1.8b",
+    "qwen2-moe-a2.7b", "arctic-480b", "xlstm-1.3b", "hymba-1.5b",
+    "whisper-base", "llama-3.2-vision-90b",
+]
+
+
+def _rules_for(cfg, shape, mesh):
+    if shape.kind == "train":
+        return TRAIN_RULES(mesh.axis_names)
+    if shape.name == "long_500k":
+        return LONG_CONTEXT_RULES(mesh.axis_names)
+    return DECODE_RULES(mesh.axis_names)
+
+
+def _arch_overrides(cfg, shape):
+    """Per-cell production settings (documented in EXPERIMENTS.md §Dry-run)."""
+    over = {}
+    if shape.kind == "decode" and shape.global_batch * shape.seq_len >= 2**22:
+        over["kv_cache_dtype"] = "int8"   # 32k x 128 caches need int8 (DESIGN §5)
+    if cfg.name == "arctic-480b" and shape.kind == "train":
+        over["opt_moment_dtype"] = "bfloat16"  # fit 480B optimizer state
+    return over
+
+
+def lower_cell(arch, shape_name, multi_pod, ocfg=None):
+    """Lower + compile one cell; returns the record dict."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multipod" if multi_pod else "pod",
+                "status": "skipped", "reason": reason}
+
+    over = _arch_overrides(cfg, shape)
+    moment_dtype = over.pop("opt_moment_dtype", "float32")
+    if over:
+        cfg = cfg.__class__(**{**cfg.__dict__, **over})
+    ocfg = ocfg or OptConfig(moment_dtype=moment_dtype)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = _rules_for(cfg, shape, mesh)
+    schema = M.model_schema(cfg)
+    abstract_p = M.abstract_model(cfg, dtype=jnp.float32)
+    pspecs = sanitize_specs(abstract_p, partition_specs(schema, rules), mesh)
+    specs = input_specs(cfg, shape)
+    batch_specs = sanitize_specs(
+        specs, M.batch_partition_specs(cfg, shape.kind, rules), mesh)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            state = abstract_train_state(cfg, ocfg)
+            state_specs = {
+                "params": pspecs,
+                "opt": {"m": pspecs, "v": pspecs, "step": PartitionSpec()},
+            }
+            step = make_train_step(cfg, ocfg, rules)
+            in_sh = (shardings_for(state_specs, mesh),
+                     shardings_for(batch_specs, mesh))
+            lowered = jax.jit(
+                step, in_shardings=in_sh,
+                out_shardings=(in_sh[0], None),
+            ).lower(state, specs)
+        elif shape.kind == "prefill":
+            params = abstract_p
+            step = make_prefill_step(cfg, rules, max_len=shape.seq_len)
+            cache_abs = M.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+            cache_specs = sanitize_specs(
+                cache_abs, M.cache_partition_specs(cfg, rules), mesh)
+            in_sh = (shardings_for(pspecs, mesh), shardings_for(batch_specs, mesh))
+            lowered = jax.jit(
+                step, in_shardings=in_sh,
+                out_shardings=(None, shardings_for(cache_specs, mesh)),
+            ).lower(params, specs)
+        else:  # decode
+            params = abstract_p
+            cache = M.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+            cache_specs = sanitize_specs(
+                cache, M.cache_partition_specs(cfg, rules), mesh)
+            step = make_decode_step(cfg, rules)
+            in_sh = (
+                shardings_for(pspecs, mesh),
+                shardings_for(cache_specs, mesh),
+                NamedSharding(mesh, M.batch_partition_specs(cfg, "decode", rules)["tokens"]),
+            )
+            lowered = jax.jit(
+                step, in_shardings=in_sh,
+                out_shardings=(None, in_sh[1]),
+            ).lower(params, cache, specs["tokens"])
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    # Trip-count-corrected static analysis (XLA:CPU cost_analysis counts
+    # while bodies once — see launch/hlo_analysis.py).
+    hlo = analyze_hlo(compiled.as_text())
+    n_chips = 512 if multi_pod else 256
+    mf = model_flops(cfg, shape)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multipod" if multi_pod else "pod",
+        "status": "ok",
+        "chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": hlo.flops,
+        "bytes_per_device": hlo.bytes_accessed,
+        "flops_per_device_loop_once": cost.get("flops", 0.0) if cost else None,
+        "collectives": {
+            "per_kind_bytes": hlo.collective_bytes,
+            "counts": hlo.collective_counts,
+            "total_bytes": hlo.total_collective_bytes,
+        },
+        "memory_analysis": _mem_dict(mem),
+        "kv_cache_dtype": cfg.kv_cache_dtype,
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / n_chips,
+        "useful_flops_ratio": (mf / n_chips) / hlo.flops if hlo.flops else None,
+        "roofline": roofline_terms(
+            flops_per_device=hlo.flops,
+            bytes_per_device=hlo.bytes_accessed,
+            collective_bytes_per_device=hlo.total_collective_bytes,
+        ),
+    }
+    return rec
+
+
+def _mem_dict(mem):
+    if mem is None:
+        return None
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if hasattr(mem, attr):
+            out[attr] = getattr(mem, attr)
+    return out or str(mem)
+
+
+def run_cell(arch, shape_name, mesh_name, force=False):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / f"{arch}__{shape_name}__{mesh_name}.json"
+    if path.exists() and not force:
+        rec = json.loads(path.read_text())
+        if rec.get("status") in ("ok", "skipped"):
+            print(f"[cached] {path.name}: {rec['status']}")
+            return rec
+    try:
+        rec = lower_cell(arch, shape_name, mesh_name == "multipod")
+    except Exception as e:  # a failure here is a bug in the system
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    path.write_text(json.dumps(rec, indent=1, default=str))
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        extra = (f" compile={rec['compile_s']}s flops/dev={rec['flops_per_device']:.3g}"
+                 f" coll={rec['collectives']['total_bytes']:.3g}B")
+    print(f"[{status}] {path.name}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        for mesh_name in meshes:
+            for arch in LM_ARCHS:
+                for shape_name in SHAPES:
+                    run_cell(arch, shape_name, mesh_name, args.force)
+    else:
+        assert args.arch and args.shape
+        for mesh_name in meshes:
+            run_cell(args.arch, args.shape, mesh_name, args.force)
+
+
+if __name__ == "__main__":
+    main()

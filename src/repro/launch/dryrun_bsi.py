@@ -1,0 +1,134 @@
+# Must precede every other import (see dryrun.py).
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Dry-run for the paper's own workload (``--arch bsi_paper``).
+
+Lowers the dense-deformation-field expansion for each dataset volume
+(paper Table 2) in each algorithm form, sharded over the production mesh:
+the control grid is replicated (it is ~100x smaller than the field); the
+output field is sharded over (data, model) on its x/y axes, so GSPMD emits
+halo exchanges for the tile overlap — the distributed analogue of the
+paper's Eq. (A.4) overlap accounting.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_bsi [--mesh pod|multipod|both]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.bsi_paper import BSI_WORKLOADS
+from repro.core import ffd
+from repro.core.interpolate import interpolate
+from repro.launch.dryrun import RESULTS, _mem_dict
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline_terms
+
+MODES = ("gather", "tt", "ttli", "separable")
+
+
+def bsi_flops_model(volume, tile, mode, channels=3):
+    """Analytic per-voxel op model (paper App. B + DESIGN.md)."""
+    nvox = volume[0] * volume[1] * volume[2]
+    d = tile[0]
+    per_voxel = {
+        "gather": 255, "tt": 255, "ttli": 126,
+        "separable": 2 * (4 + 16 / d + 64 / d / d),
+    }[mode]
+    return nvox * per_voxel * channels
+
+
+def lower_bsi(work, mode, multi_pod):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    gshape = ffd.grid_shape_for_volume(work.volume, work.tile)
+    phi = jax.ShapeDtypeStruct(gshape + (work.channels,), jnp.float32)
+
+    axes = mesh.axis_names
+    out_spec = (PartitionSpec(("pod", "data"), "model", None, None)
+                if "pod" in axes else
+                PartitionSpec("data", "model", None, None))
+
+    def expand(p):
+        out = ffd.dense_field(p, work.tile, work.volume, mode=mode, impl="jnp")
+        # constraint (not out_shardings): paper volumes are not divisible by
+        # the mesh; GSPMD pads under a constraint.
+        return jax.lax.with_sharding_constraint(out, out_spec)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(
+            expand,
+            in_shardings=NamedSharding(mesh, PartitionSpec()),
+        ).lower(phi)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    hlo = analyze_hlo(compiled.as_text())
+    n_chips = 512 if multi_pod else 256
+    mf = bsi_flops_model(work.volume, work.tile, mode)
+    return {
+        "arch": "bsi_paper", "workload": work.name, "mode": mode,
+        "tile": list(work.tile), "volume": list(work.volume),
+        "mesh": "multipod" if multi_pod else "pod",
+        "status": "ok", "chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": hlo.flops,
+        "bytes_per_device": hlo.bytes_accessed,
+        "collectives": {
+            "per_kind_bytes": hlo.collective_bytes,
+            "counts": hlo.collective_counts,
+            "total_bytes": hlo.total_collective_bytes,
+        },
+        "memory_analysis": _mem_dict(compiled.memory_analysis()),
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / n_chips,
+        "useful_flops_ratio": (mf / n_chips) / hlo.flops if hlo.flops else None,
+        "roofline": roofline_terms(
+            flops_per_device=hlo.flops,
+            bytes_per_device=hlo.bytes_accessed,
+            collective_bytes_per_device=hlo.total_collective_bytes,
+        ),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    for mesh_name in meshes:
+        for work in BSI_WORKLOADS:
+            for mode in MODES:
+                path = RESULTS / f"bsi_paper__{work.name}-{mode}__{mesh_name}.json"
+                if path.exists() and not args.force:
+                    print(f"[cached] {path.name}")
+                    continue
+                try:
+                    rec = lower_bsi(work, mode, mesh_name == "multipod")
+                except Exception as e:
+                    rec = {"arch": "bsi_paper", "workload": work.name,
+                           "mode": mode, "mesh": mesh_name, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-3000:]}
+                path.write_text(json.dumps(rec, indent=1, default=str))
+                print(f"[{rec['status']}] {path.name} "
+                      + (f"compile={rec.get('compile_s')}s "
+                         f"mem={rec['roofline']['memory_s']:.4f}s "
+                         f"comp={rec['roofline']['compute_s']:.4f}s"
+                         if rec["status"] == "ok" else ""), flush=True)
+
+
+if __name__ == "__main__":
+    main()

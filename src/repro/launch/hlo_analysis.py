@@ -1,0 +1,342 @@
+"""Static analysis of compiled (post-SPMD) HLO text.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts ``while`` bodies ONCE, so any
+scanned program (all of ours: layers, attention chunks, loss chunks) is
+undercounted by the trip count.  This module re-derives per-device
+
+  * dot FLOPs            (2 x prod(out dims) x prod(contracting dims))
+  * HBM traffic bytes    (operand + output bytes of top-level ops; fusion
+                          internals excluded — a fusion reads its inputs and
+                          writes its output once)
+  * collective bytes     (output bytes per collective kind)
+
+by walking the call graph from ENTRY and scaling every ``while`` body by its
+``known_trip_count`` backend config.  Validated against an unrolled oracle in
+``tests/test_hlo_analysis.py``.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["analyze_hlo", "HloStats"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s32": 4, "u32": 4,
+    "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+# tuple types may contain /*index=N*/ comments (hence [^()] not [^=])
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|[\w\[\]{},]+))\s+"
+    r"([\w\-]+)\("
+)
+_CALL_ATTRS = ("calls", "to_apply", "body", "condition")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems(type_str):
+    """[(dtype, n_elems), ...] across tuple elements."""
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out.append((dtype, n))
+    return out
+
+
+def _shape_bytes(type_str):
+    return sum(n * _DTYPE_BYTES[dt] for dt, n in _shape_elems(type_str))
+
+
+def _dims_of(type_str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclass
+class _Op:
+    var: str
+    type_str: str
+    opcode: str
+    line: str
+    operands: list
+    calls: list
+    trip: int = 1
+    is_root: bool = False
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: dict = field(default_factory=dict)
+    collective_counts: dict = field(default_factory=dict)
+    while_trips: list = field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self):
+        return sum(self.collective_bytes.values())
+
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _parse_computations(text):
+    comps = {}
+    cur_name, cur_ops, symtab = None, None, None
+    entry = None
+    for line in text.splitlines():
+        if cur_name is None:
+            if line.endswith("{"):
+                m = _COMP_HDR.match(line.strip())
+                if m:
+                    cur_name = m.group(1)
+                    if line.strip().startswith("ENTRY"):
+                        entry = cur_name
+                    cur_ops = []
+                    symtab = {}
+                    # parameter types from the header signature
+                    for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\)|[\w\[\]{},]+))",
+                                          m.group(2)):
+                        symtab[pm.group(1)] = pm.group(2)
+            continue
+        if line.startswith("}"):
+            comps[cur_name] = (cur_ops, symtab)
+            cur_name = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        var, type_str, opcode = m.group(1), m.group(2), m.group(3)
+        symtab[var] = type_str
+        # operands: names inside the first (...) after the opcode
+        paren = line[line.index(opcode + "(") + len(opcode):]
+        depth = 0
+        arglist = ""
+        for ch in paren:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                arglist += ch
+        operands = _OPERAND_RE.findall(arglist)
+        calls = []
+        for attr in _CALL_ATTRS:
+            for cm in re.finditer(attr + r"=%([\w.\-]+)", line):
+                calls.append((attr, cm.group(1)))
+        bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+        if bm:
+            for name in _OPERAND_RE.findall(bm.group(1)):
+                calls.append(("branch", name))
+        bc = _TRIP_RE.search(line)
+        trip = int(bc.group(1)) if bc else 1
+        cur_ops.append(_Op(var, type_str, opcode, line, operands, calls, trip,
+                           "ROOT " in line[:12]))
+    return comps, entry
+
+
+def _dot_flops(op: _Op, symtab):
+    out_elems = 1
+    for d in _dims_of(op.type_str):
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if m and op.operands:
+        lhs_type = symtab.get(op.operands[0], "")
+        lhs_dims = _dims_of(lhs_type)
+        if m.group(1):
+            for i in m.group(1).split(","):
+                i = int(i)
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: _Op, symtab):
+    # output elems x (2 x kernel elems / output-channels) — good enough for
+    # the rare conv in this codebase (none in the dry-run graphs today).
+    out_elems = 1
+    for d in _dims_of(op.type_str):
+        out_elems *= d
+    if len(op.operands) >= 2:
+        k_elems = 1
+        for d in _dims_of(symtab.get(op.operands[1], "")):
+            k_elems *= d
+        return 2.0 * out_elems * k_elems
+    return 0.0
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps, entry = _parse_computations(text)
+    stats = HloStats(
+        collective_bytes={k: 0.0 for k in _COLLECTIVES},
+        collective_counts={k: 0 for k in _COLLECTIVES},
+    )
+    flops_memo = {}
+
+    def comp_flops(name):
+        """dot/conv FLOPs of a computation including nested calls (memoised,
+        while-scaling applied at the call site)."""
+        if name in flops_memo:
+            return flops_memo[name]
+        ops, symtab = comps.get(name, ([], {}))
+        total = 0.0
+        for op in ops:
+            if op.opcode == "dot":
+                total += _dot_flops(op, symtab)
+            elif op.opcode == "convolution":
+                total += _conv_flops(op, symtab)
+            for attr, callee in op.calls:
+                if attr == "condition":
+                    continue
+                mult = op.trip if (op.opcode == "while" and attr == "body") else 1
+                total += mult * comp_flops(callee)
+        flops_memo[name] = total
+        return total
+
+    visited_bytes = {}
+
+    def _sliced_operand_bytes(callee, i, fallback):
+        """If fusion parameter ``i`` is only consumed by slice/gather/update
+        ops, the real HBM traffic is the slice/update size, not the whole
+        operand (the layer-scan weight-slice / carry-update patterns)."""
+        ops, sym = comps.get(callee, ([], {}))
+        pvar = None
+        for op in ops:
+            if op.opcode == "parameter" and f"parameter({i})" in op.line:
+                pvar = op.var
+                break
+        if pvar is None:
+            return fallback
+        consumers = [op for op in ops if pvar in op.operands]
+        slicey = ("dynamic-slice", "slice", "gather", "dynamic-update-slice")
+        if consumers and all(op.opcode in slicey for op in consumers):
+            total = 0.0
+            for op in consumers:
+                if op.opcode == "dynamic-update-slice":
+                    # in-place update: traffic = update operand size
+                    if len(op.operands) > 1 and op.operands[0] == pvar:
+                        total += _shape_bytes(sym.get(op.operands[1], ""))
+                    else:  # param is the update itself
+                        total += _shape_bytes(sym.get(pvar, ""))
+                else:
+                    total += _shape_bytes(op.type_str)
+            return total
+        return fallback
+
+    def _fusion_out_bytes(callee, fallback):
+        """A fusion rooted in dynamic-update-slice writes only the update
+        (the target buffer is aliased in place)."""
+        ops, sym = comps.get(callee, ([], {}))
+        for op in ops:
+            if not op.is_root:
+                continue
+            cur = op
+            # look through a root bitcast to the DUS
+            for _ in range(3):
+                if cur.opcode == "dynamic-update-slice":
+                    if len(cur.operands) > 1:
+                        return _shape_bytes(sym.get(cur.operands[1], ""))
+                    return fallback
+                if cur.opcode == "bitcast" and cur.operands:
+                    nxt = next((o2 for o2 in ops if o2.var == cur.operands[0]),
+                               None)
+                    if nxt is None:
+                        break
+                    cur = nxt
+                else:
+                    break
+        return fallback
+
+    def op_bytes(op, symtab):
+        out_b = _shape_bytes(op.type_str)
+        if op.opcode in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * out_b              # read slice + write output
+        if op.opcode == "dynamic-update-slice":
+            upd = _shape_bytes(symtab.get(op.operands[1], "")) if len(op.operands) > 1 else out_b
+            return 2.0 * upd                # read update + write in place
+        if op.opcode == "scatter":
+            upd = _shape_bytes(symtab.get(op.operands[2], "")) if len(op.operands) > 2 else out_b
+            return 3.0 * upd                # read update+target slice, write
+        if op.opcode == "broadcast":
+            return out_b
+        if op.opcode == "fusion":
+            callee = next((c for a, c in op.calls if a == "calls"), None)
+            b = _fusion_out_bytes(callee, out_b)
+            for i, o in enumerate(op.operands):
+                ob = _shape_bytes(symtab.get(o, ""))
+                if callee is not None and ob > out_b:
+                    ob = _sliced_operand_bytes(callee, i, ob)
+                b += ob
+            return b
+        b = out_b
+        for o in op.operands:
+            b += _shape_bytes(symtab.get(o, ""))
+        return b
+
+    def comp_bytes(name):
+        if name in visited_bytes:
+            return visited_bytes[name]
+        ops, symtab = comps.get(name, ([], {}))
+        total = 0.0
+        for op in ops:
+            if op.opcode == "while":
+                for attr, callee in op.calls:
+                    if attr == "body":
+                        total += op.trip * comp_bytes(callee)
+                continue
+            if op.opcode in ("call", "conditional"):
+                for attr, callee in op.calls:
+                    if attr != "condition":
+                        total += comp_bytes(callee)
+                continue
+            if op.opcode in _SKIP_BYTES:
+                continue
+            total += op_bytes(op, symtab)
+        visited_bytes[name] = total
+        return total
+
+    def comp_collectives(name, mult):
+        ops, symtab = comps.get(name, ([], {}))
+        for op in ops:
+            kind = op.opcode.removesuffix("-start")
+            if kind in _COLLECTIVES and not op.opcode.endswith("-done"):
+                stats.collective_bytes[kind] += mult * _shape_bytes(op.type_str)
+                stats.collective_counts[kind] += mult
+            for attr, callee in op.calls:
+                if attr == "condition":
+                    continue
+                m2 = op.trip if (op.opcode == "while" and attr == "body") else 1
+                comp_collectives(callee, mult * m2)
+            if op.opcode == "while":
+                stats.while_trips.append(op.trip)
+
+    if entry:
+        stats.flops = comp_flops(entry)
+        stats.bytes_accessed = comp_bytes(entry)
+        comp_collectives(entry, 1)
+    return stats

@@ -1,0 +1,122 @@
+"""Roofline model: three terms from the compiled dry-run artifact.
+
+TPU v5e hardware constants (per chip):
+  peak bf16 compute  197 TFLOP/s
+  HBM bandwidth      819 GB/s
+  ICI per link       ~50 GB/s
+
+  compute_term_s    = FLOPs/device / peak
+  memory_term_s     = bytes/device / HBM_bw
+  collective_term_s = collective bytes/device / link_bw
+
+``cost_analysis`` on the SPMD-partitioned executable reports *per-device*
+FLOPs/bytes.  Collective bytes are not in cost_analysis: we parse the
+post-optimization HLO and sum operand sizes of every collective op.
+"""
+from __future__ import annotations
+
+import re
+
+__all__ = [
+    "PEAK_FLOPS", "HBM_BW", "LINK_BW",
+    "collective_bytes_from_hlo", "roofline_terms", "model_flops",
+]
+
+PEAK_FLOPS = 197e12   # bf16 FLOP/s per chip
+HBM_BW = 819e9        # B/s per chip
+LINK_BW = 50e9        # B/s per ICI link
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g. "  %ag = bf16[16,4096,512]{2,1,0} all-gather(...)" or tuple-typed ops
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*\)|\S+)\s+("
+    + "|".join(_COLLECTIVES) + r")[\s(]"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op (per-device program)."""
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        per_kind[kind] += b
+        counts[kind] += 1
+    return {
+        "per_kind_bytes": per_kind,
+        "counts": counts,
+        "total_bytes": sum(per_kind.values()),
+    }
+
+
+def roofline_terms(flops_per_device, bytes_per_device,
+                   collective_bytes_per_device):
+    compute_s = (flops_per_device or 0.0) / PEAK_FLOPS
+    memory_s = (bytes_per_device or 0.0) / HBM_BW
+    collective_s = (collective_bytes_per_device or 0.0) / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {
+        **terms,
+        "dominant": dom,
+        # fraction of ideal (bound-only) time if overlap were perfect
+        "roofline_fraction": (bound / total) if total else 0.0,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE), D = tokens."""
+    n = active_param_count(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n * tokens
+
+
+def active_param_count(cfg) -> float:
+    """Parameter count, with MoE counting only routed-active experts."""
+    from repro.models.model import model_schema
+    from repro.models.schema import map_schema
+    import jax
+
+    schema = model_schema(cfg)
+    total = 0
+    for path, p in jax.tree_util.tree_flatten_with_path(
+        schema, is_leaf=lambda x: hasattr(x, "axes")
+    )[0]:
+        n = 1
+        for s in p.shape:
+            n *= s
+        keys = jax.tree_util.keystr(path)
+        if "experts" in keys and cfg.num_experts:
+            n = n * (cfg.top_k / cfg.num_experts)
+        total += n
+    return float(total)

@@ -1,0 +1,123 @@
+"""Render the §Dry-run and §Roofline tables from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.launch.roofline_report [--mesh pod]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.launch.dryrun import RESULTS
+
+ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load(mesh="pod", arch_filter=None):
+    recs = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        if arch_filter and not r["arch"].startswith(arch_filter):
+            continue
+        recs.append(r)
+    recs.sort(key=lambda r: (r["arch"], ORDER.get(r.get("shape"), 9),
+                             r.get("mode", "")))
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(mesh):
+    rows = ["| arch | shape | status | compile_s | args/dev | temps/dev | "
+            "flops/dev | coll bytes/dev | notes |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh):
+        if r["arch"] == "bsi_paper":
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | skipped | - | - | - |"
+                        f" - | - | {r['reason'][:60]} |")
+            continue
+        ma = r.get("memory_analysis") or {}
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['status']} |"
+            f" {r.get('compile_s', '-')} |"
+            f" {fmt_bytes(ma.get('argument_size_in_bytes'))} |"
+            f" {fmt_bytes(ma.get('temp_size_in_bytes'))} |"
+            f" {r['flops_per_device']:.3g} |"
+            f" {fmt_bytes(r['collectives']['total_bytes'])} |"
+            f" kv={r.get('kv_cache_dtype','-')} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(mesh):
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | dominant |"
+            " roofline_frac | useful_flops | one-line diagnosis |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh):
+        if r["status"] != "ok" or r["arch"] == "bsi_paper":
+            continue
+        rf = r["roofline"]
+        uf = r.get("useful_flops_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} |"
+            f" {rf['compute_s']:.4g} | {rf['memory_s']:.4g} |"
+            f" {rf['collective_s']:.4g} | {rf['dominant'].replace('_s','')} |"
+            f" {rf['roofline_fraction']:.2f} |"
+            f" {uf:.2f} |" if uf is not None else " - |")
+        rows[-1] += f" {_diagnose(r)} |"
+    return "\n".join(rows)
+
+
+def bsi_table(mesh):
+    rows = ["| volume | mode | compute_s | memory_s | collective_s |"
+            " dominant | useful_flops |",
+            "|---|---|---|---|---|---|---|"]
+    for r in load(mesh, arch_filter="bsi_paper"):
+        if r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        uf = r.get("useful_flops_ratio") or 0.0
+        rows.append(
+            f"| {r['workload']} | {r['mode']} | {rf['compute_s']:.3g} |"
+            f" {rf['memory_s']:.3g} | {rf['collective_s']:.3g} |"
+            f" {rf['dominant'].replace('_s','')} |"
+            f" {uf:.2f} |")
+    return "\n".join(rows)
+
+
+def _diagnose(r):
+    rf = r["roofline"]
+    dom = rf["dominant"]
+    if dom == "memory_s":
+        return "HBM-bound: shrink saved activations / cache reads"
+    if dom == "collective_s":
+        kinds = r["collectives"]["per_kind_bytes"]
+        top = max(kinds, key=kinds.get)
+        return f"ICI-bound: {top} dominates ({fmt_bytes(kinds[top])})"
+    return "compute-bound: good — push MXU utilisation"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    args = ap.parse_args()
+    print(f"## Dry-run ({args.mesh})\n")
+    print(dryrun_table(args.mesh))
+    print(f"\n## Roofline ({args.mesh})\n")
+    print(roofline_table(args.mesh))
+    print(f"\n## BSI workloads ({args.mesh})\n")
+    print(bsi_table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

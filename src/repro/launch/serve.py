@@ -1,0 +1,79 @@
+"""Batched serving driver: prefill + decode with a quantizable KV cache.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
+        --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.training.steps import make_decode_step, make_prefill_step
+
+__all__ = ["generate", "main"]
+
+
+def generate(cfg, params, prompts, max_len, gen_steps, *, greedy=True, seed=0):
+    """prompts: (B, P) int32. Returns (B, gen_steps) generated tokens."""
+    B, P = prompts.shape
+    prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
+    decode = jax.jit(make_decode_step(cfg))
+    batch = {"tokens": jnp.asarray(prompts)}
+    if cfg.family == "encdec":
+        batch["frame_embeddings"] = jnp.zeros(
+            (B, max(P // cfg.encoder_seq_divisor, 1), cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["image_embeddings"] = jnp.zeros(
+            (B, cfg.img_tokens, cfg.d_model), jnp.float32)
+    logits, cache = prefill(params, batch)
+    rng = jax.random.PRNGKey(seed)
+    out = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    for i in range(gen_steps):
+        out.append(tok)
+        logits, cache = decode(params, cache, tok)
+        if greedy:
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        else:
+            rng, k = jax.random.split(rng)
+            tok = jax.random.categorical(k, logits[:, -1])[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1), cache
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--kv-dtype", default=None, choices=[None, "bfloat16", "int8"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.kv_dtype:
+        cfg = cfg.__class__(**{**cfg.__dict__, "kv_cache_dtype": args.kv_dtype})
+    params = M.init_model(cfg, seed=0)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    max_len = args.prompt_len + args.gen + 1
+
+    t0 = time.perf_counter()
+    toks, cache = generate(cfg, params, prompts, max_len, args.gen)
+    dt = time.perf_counter() - t0
+    n = args.batch * args.gen
+    print(f"arch={cfg.name} kv={cfg.kv_cache_dtype} generated {n} tokens "
+          f"in {dt:.2f}s ({n/dt:.1f} tok/s incl. compile)")
+    print("sample:", np.asarray(toks[0, :16]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,261 @@
+"""Attention: GQA projections, blockwise (flash-style) softmax, KV caches.
+
+Blockwise attention scans over query and KV chunks with online-softmax
+accumulators (the jnp analogue of FlashAttention) so 32k-token prefill never
+materialises an (S, S) score matrix.  Supports causal masking, sliding
+windows (gemma local layers), logit softcaps (gemma2) and cross-attention
+(whisper / llama-vision).  Decode reads a bf16 or int8-quantised KV cache;
+int8 uses per-(token, head) scales (KIVI-style) to fit 32k x 128 caches in
+HBM (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.schema import P, lead
+from repro.models.layers import rope
+
+__all__ = [
+    "attn_schema", "project_qkv", "attend_blockwise", "attend_full",
+    "cache_schema_shapes", "init_cache", "update_cache", "read_cache",
+    "decode_attend", "out_proj",
+]
+
+NEG_INF = -2.0e30
+
+
+def attn_schema(d, n_heads, n_kv, hd, qkv_bias=False, layers=None, prefix=""):
+    """Head dims stored flattened (d, H*hd): H*hd is divisible by the 16-way
+    model axis for every assigned arch, while H alone often is not."""
+    pre, ax = lead(layers)
+    s = {
+        "wq": P(pre + (d, n_heads * hd), ax + ("embed", "heads")),
+        "wk": P(pre + (d, n_kv * hd), ax + ("embed", "kv_heads")),
+        "wv": P(pre + (d, n_kv * hd), ax + ("embed", "kv_heads")),
+        "wo": P(pre + (n_heads * hd, d), ax + ("heads", "embed")),
+    }
+    if qkv_bias:
+        s["bq"] = P(pre + (n_heads * hd,), ax + ("heads",), init="zeros")
+        s["bk"] = P(pre + (n_kv * hd,), ax + ("kv_heads",), init="zeros")
+        s["bv"] = P(pre + (n_kv * hd,), ax + ("kv_heads",), init="zeros")
+    return s
+
+
+def proj_heads(w, x, n_heads, bias=None):
+    """x (B,S,D) @ w (D, H*hd) -> (B, S, H, hd)."""
+    y = jnp.einsum("bsd,de->bse", x, w)
+    if bias is not None:
+        y = y + bias
+    B, S, E = y.shape
+    return y.reshape(B, S, n_heads, E // n_heads)
+
+
+def project_qkv(p, x, positions, rope_theta=10_000.0, use_rope=True,
+                n_heads=None, n_kv=None):
+    """x: (B, S, D) -> q (B, S, H, hd), k/v (B, S, KV, hd)."""
+    hd_total = p["wq"].shape[-1]
+    kv_total = p["wk"].shape[-1]
+    if n_heads is None:  # infer: hd == kv_total // n_kv == hd_total // n_heads
+        n_heads, n_kv = _infer_heads(hd_total, kv_total)
+    q = proj_heads(p["wq"], x, n_heads, p.get("bq"))
+    k = proj_heads(p["wk"], x, n_kv, p.get("bk"))
+    v = proj_heads(p["wv"], x, n_kv, p.get("bv"))
+    if use_rope:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+    return q, k, v
+
+
+_HEAD_HINTS = {}
+
+
+def set_head_hint(hd_total, kv_total, n_heads, n_kv):
+    _HEAD_HINTS[(hd_total, kv_total)] = (n_heads, n_kv)
+
+
+def _infer_heads(hd_total, kv_total):
+    if (hd_total, kv_total) in _HEAD_HINTS:
+        return _HEAD_HINTS[(hd_total, kv_total)]
+    raise ValueError(
+        f"cannot infer head split for ({hd_total}, {kv_total}); call "
+        "set_head_hint or pass n_heads/n_kv")
+
+
+def out_proj(p, o):
+    B, S, H, hd = o.shape
+    return jnp.einsum("bse,ed->bsd", o.reshape(B, S, H * hd), p["wo"])
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    B, S, KV, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None], (B, S, KV, n_rep, hd)).reshape(
+        B, S, KV * n_rep, hd
+    )
+
+
+def _mask_bias(q_pos, k_pos, causal, window, dtype=jnp.float32):
+    """(Q, K) additive mask. window > 0 keeps k_pos > q_pos - window."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    # `window` may be a traced scalar (per-layer flag under scan): 0 = full.
+    win_ok = k_pos[None, :] > (q_pos[:, None] - jnp.maximum(window, 1))
+    ok &= jnp.where(window > 0, win_ok, True)
+    return jnp.where(ok, 0.0, NEG_INF).astype(dtype)
+
+
+def attend_full(q, k, v, *, q_positions, k_positions, causal=True, window=0,
+                softcap=0.0):
+    """Unchunked attention (short sequences / smoke tests)."""
+    hd = q.shape[-1]
+    n_rep = q.shape[2] // k.shape[2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    s = jnp.einsum("bqhd,bmhd->bhqm", q, k).astype(jnp.float32) / jnp.sqrt(hd)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = s + _mask_bias(q_positions, k_positions, causal, window)[None, None]
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqm,bmhk->bqhk", w.astype(v.dtype), v)
+
+
+def attend_blockwise(q, k, v, *, q_positions, k_positions, causal=True,
+                     window=0, softcap=0.0, q_chunk=1024, kv_chunk=1024):
+    """Flash-style blockwise attention: scan q chunks x kv chunks."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    n_rep = H // k.shape[2]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    if Sq % q_chunk or Sk % kv_chunk:
+        return attend_full(q, k, v, q_positions=q_positions,
+                           k_positions=k_positions, causal=causal,
+                           window=window, softcap=softcap)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    qc = q.reshape(B, nq, q_chunk, H, hd).swapaxes(0, 1)
+    qp = q_positions.reshape(nq, q_chunk)
+    kc = k.reshape(B, nk, kv_chunk, *k.shape[2:]).swapaxes(0, 1)
+    vc = v.reshape(B, nk, kv_chunk, *v.shape[2:]).swapaxes(0, 1)
+    kp = k_positions.reshape(nk, kv_chunk)
+    scale = 1.0 / jnp.sqrt(hd)
+
+    def q_step(_, q_xs):
+        qi, qpi = q_xs
+
+        def kv_step(carry, kv_xs):
+            m, l, acc = carry
+            ki, vi, kpi = kv_xs
+            kk = _repeat_kv(ki, n_rep)
+            vv = _repeat_kv(vi, n_rep)
+            s = jnp.einsum("bqhk,bmhk->bhqm", qi, kk).astype(jnp.float32) * scale
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            s = s + _mask_bias(qpi, kpi, causal, window)[None, None]
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqm,bmhk->bhqk", p, vv.astype(jnp.float32)
+            )
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, H, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kc, vc, kp))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, o.swapaxes(1, 2).astype(q.dtype)  # (B, q_chunk, H, hd)
+
+    _, oc = jax.lax.scan(q_step, None, (qc, qp))
+    return oc.swapaxes(0, 1).reshape(B, Sq, H, hd)
+
+
+# ---------------------------------------------------------------- KV caches
+
+def cache_schema_shapes(cfg, batch, max_len):
+    """Shapes/dtypes of one layer-stack's KV cache (leading layers axis)."""
+    hd = cfg.resolved_head_dim
+    L, KV = cfg.num_layers, cfg.num_kv_heads
+    base = dict(
+        k=((L, batch, max_len, KV, hd), cfg.kv_cache_dtype),
+        v=((L, batch, max_len, KV, hd), cfg.kv_cache_dtype),
+    )
+    if cfg.kv_cache_dtype == "int8":
+        base["k_scale"] = ((L, batch, max_len, KV), "float32")
+        base["v_scale"] = ((L, batch, max_len, KV), "float32")
+    return base
+
+
+def init_cache(cfg, batch, max_len):
+    out = {
+        name: jnp.zeros(shape, jnp.dtype(dt))
+        for name, (shape, dt) in cache_schema_shapes(cfg, batch, max_len).items()
+    }
+    out["pos"] = jnp.zeros((), jnp.int32)
+    return out
+
+
+def _quant_int8(x):
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None]).astype(jnp.int8)
+    return q, scale
+
+
+def update_cache(cache_layer, k_new, v_new, pos, quantized):
+    """Write (B, S_new, KV, hd) keys/values at offset ``pos``."""
+    if quantized:
+        kq, ks = _quant_int8(k_new)
+        vq, vs = _quant_int8(v_new)
+        return dict(
+            k=jax.lax.dynamic_update_slice(cache_layer["k"], kq, (0, pos, 0, 0)),
+            v=jax.lax.dynamic_update_slice(cache_layer["v"], vq, (0, pos, 0, 0)),
+            k_scale=jax.lax.dynamic_update_slice(cache_layer["k_scale"], ks, (0, pos, 0)),
+            v_scale=jax.lax.dynamic_update_slice(cache_layer["v_scale"], vs, (0, pos, 0)),
+        )
+    return dict(
+        k=jax.lax.dynamic_update_slice(
+            cache_layer["k"], k_new.astype(cache_layer["k"].dtype), (0, pos, 0, 0)
+        ),
+        v=jax.lax.dynamic_update_slice(
+            cache_layer["v"], v_new.astype(cache_layer["v"].dtype), (0, pos, 0, 0)
+        ),
+    )
+
+
+def read_cache(cache_layer, compute_dtype):
+    if "k_scale" in cache_layer:
+        k = cache_layer["k"].astype(jnp.float32) * cache_layer["k_scale"][..., None]
+        v = cache_layer["v"].astype(jnp.float32) * cache_layer["v_scale"][..., None]
+        return k.astype(compute_dtype), v.astype(compute_dtype)
+    return (
+        cache_layer["k"].astype(compute_dtype),
+        cache_layer["v"].astype(compute_dtype),
+    )
+
+
+def decode_attend(q, k_cache, v_cache, *, q_pos, cache_len, window=0, softcap=0.0):
+    """Single-step decode attention over the full cache with a length mask.
+
+    q: (B, 1, H, hd); k/v_cache: (B, S_max, KV, hd) already dequantised.
+    """
+    B, _, H, hd = q.shape
+    S = k_cache.shape[1]
+    n_rep = H // k_cache.shape[2]
+    kk = _repeat_kv(k_cache, n_rep)
+    vv = _repeat_kv(v_cache, n_rep)
+    s = jnp.einsum("bqhk,bmhk->bhqm", q, kk).astype(jnp.float32) / jnp.sqrt(hd)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kpos = jnp.arange(S)
+    ok = kpos[None, None, None, :] <= q_pos
+    ok &= kpos[None, None, None, :] < cache_len
+    win_ok = kpos[None, None, None, :] > (q_pos - jnp.maximum(window, 1))
+    ok &= jnp.where(window > 0, win_ok, True)
+    s = jnp.where(ok, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqm,bmhk->bqhk", w.astype(vv.dtype), vv)

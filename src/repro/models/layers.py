@@ -1,0 +1,128 @@
+"""Shared neural layers: norms, RoPE, MLPs, embeddings, chunked loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.schema import P, lead
+
+__all__ = [
+    "rmsnorm", "layernorm", "norm_schema", "apply_norm",
+    "rope", "glu_mlp", "gelu_mlp", "mlp_schema", "apply_mlp",
+    "embed_schema", "chunked_xent",
+]
+
+
+def norm_schema(d, kind="rmsnorm", layers=None):
+    pre, ax = lead(layers)
+    s = {"scale": P(pre + (d,), ax + ("embed",), init="ones")}
+    if kind == "layernorm":
+        s["bias"] = P(pre + (d,), ax + ("embed",), init="zeros")
+    return s
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return (y + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(p, x, kind="rmsnorm", eps=1e-6):
+    if kind == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], eps)
+    return rmsnorm(x, p["scale"], eps)
+
+
+def rope(x, positions, theta=10_000.0):
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def mlp_schema(d, f, act="silu", layers=None):
+    pre, ax = lead(layers)
+    if act == "silu":  # GLU: gate + up + down
+        return {
+            "wi_gate": P(pre + (d, f), ax + ("embed", "ff")),
+            "wi_up": P(pre + (d, f), ax + ("embed", "ff")),
+            "wo": P(pre + (f, d), ax + ("ff", "embed")),
+        }
+    return {  # plain MLP (whisper-style)
+        "wi": P(pre + (d, f), ax + ("embed", "ff")),
+        "bi": P(pre + (f,), ax + ("ff",), init="zeros"),
+        "wo": P(pre + (f, d), ax + ("ff", "embed")),
+        "bo": P(pre + (d,), ax + ("embed",), init="zeros"),
+    }
+
+
+def glu_mlp(p, x):
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["wi_gate"]))
+    u = jnp.einsum("...d,df->...f", x, p["wi_up"])
+    return jnp.einsum("...f,fd->...d", g * u, p["wo"])
+
+
+def gelu_mlp(p, x):
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["wi"]) + p["bi"])
+    return jnp.einsum("...f,fd->...d", h, p["wo"]) + p["bo"]
+
+
+def apply_mlp(p, x, act="silu"):
+    return glu_mlp(p, x) if act == "silu" else gelu_mlp(p, x)
+
+
+def embed_schema(vocab, d):
+    return {"table": P((vocab, d), ("vocab", "embed"), scale=1.0)}
+
+
+def chunked_xent(h, embed_table, labels, chunk=1024, final_softcap=0.0):
+    """Sequence-chunked cross-entropy: bounds the (tokens, vocab) logits.
+
+    h: (B, S, D) final hidden states; labels: (B, S) int32 (-1 = masked).
+    Returns mean NLL over unmasked tokens.
+    """
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = h.reshape(B, n, chunk, D).swapaxes(0, 1)        # (n, B, c, D)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)       # (n, B, c)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hh, ll = xs
+        logits = jnp.einsum("bcd,vd->bcv", hh.astype(jnp.float32),
+                            embed_table.astype(jnp.float32))
+        if final_softcap:
+            logits = jnp.tanh(logits / final_softcap) * final_softcap
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ix = jnp.clip(ll, 0, logits.shape[-1] - 1)
+        gold = jnp.take_along_axis(logits, ix[..., None], axis=-1)[..., 0]
+        mask = (ll >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - gold) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

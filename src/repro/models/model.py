@@ -1,0 +1,896 @@
+"""Composable model definitions for the 10 assigned architectures.
+
+One schema/forward/prefill/decode family covers dense, MoE and hybrid
+decoders (per-layer sliding-window flags handle gemma's local:global
+patterns and hymba's 3 full-attention layers without breaking the layer
+scan); xLSTM, enc-dec (whisper) and VLM (llama-vision) get their own
+stacks.  Everything scans over stacked layer parameters (small HLO, fast
+512-way SPMD compiles) with optional remat.
+
+Simplifications vs the exact HF checkpoints are listed in DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm
+from repro.models.layers import (
+    apply_mlp, apply_norm, chunked_xent, embed_schema, mlp_schema, norm_schema,
+)
+from repro.models.schema import P, abstract_params, init_params
+
+__all__ = [
+    "model_schema", "init_model", "abstract_model",
+    "forward_train", "loss_fn", "prefill", "decode_step",
+    "abstract_cache", "init_decode_cache",
+]
+
+
+# ----------------------------------------------------------------- schemas
+
+def _decoder_blocks_schema(cfg: ModelConfig, L: int):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    s = {
+        "ln1": norm_schema(d, cfg.norm, layers=L),
+        "attn": attn.attn_schema(d, cfg.num_heads, cfg.num_kv_heads, hd,
+                                 cfg.qkv_bias, layers=L),
+        "ln2": norm_schema(d, cfg.norm, layers=L),
+    }
+    if cfg.num_experts:
+        s["moe"] = moe_lib.moe_schema(cfg, layers=L)
+        if cfg.dense_residual and cfg.d_ff:
+            s["mlp"] = mlp_schema(d, cfg.d_ff, cfg.act, layers=L)
+    elif cfg.d_ff:
+        s["mlp"] = mlp_schema(d, cfg.d_ff, cfg.act, layers=L)
+    if cfg.family == "hybrid":
+        s["ln_mamba"] = norm_schema(d, cfg.norm, layers=L)
+        s["mamba"] = ssm.mamba_schema(d, cfg.ssm_state, cfg.mamba_expand,
+                                      cfg.mamba_conv, layers=L)
+    return s
+
+
+def _xlstm_schema(cfg: ModelConfig):
+    assert cfg.slstm_every > 0
+    g = cfg.slstm_every                    # group size: (g-1) mLSTM + 1 sLSTM
+    G = cfg.num_layers // g
+    d = cfg.d_model
+    return {
+        "embed": embed_schema(cfg.vocab_size, d),
+        "groups": {
+            "m_ln": norm_schema(d, cfg.norm, layers=(G, g - 1)),
+            "mlstm": ssm.mlstm_schema(d, cfg.num_heads, layers=(G, g - 1)),
+            "s_ln": norm_schema(d, cfg.norm, layers=G),
+            "slstm": ssm.slstm_schema(d, cfg.num_heads, layers=G),
+        },
+        "final_norm": norm_schema(d, cfg.norm),
+    }
+
+
+def _encdec_schema(cfg: ModelConfig):
+    d = cfg.d_model
+    Le, Ld = cfg.encoder_layers, cfg.num_layers - cfg.encoder_layers
+    enc = {
+        "ln1": norm_schema(d, cfg.norm, layers=Le),
+        "attn": attn.attn_schema(d, cfg.num_heads, cfg.num_kv_heads,
+                                 cfg.resolved_head_dim, layers=Le),
+        "ln2": norm_schema(d, cfg.norm, layers=Le),
+        "mlp": mlp_schema(d, cfg.d_ff, cfg.act, layers=Le),
+    }
+    dec = {
+        "ln1": norm_schema(d, cfg.norm, layers=Ld),
+        "attn": attn.attn_schema(d, cfg.num_heads, cfg.num_kv_heads,
+                                 cfg.resolved_head_dim, layers=Ld),
+        "ln_x": norm_schema(d, cfg.norm, layers=Ld),
+        "xattn": attn.attn_schema(d, cfg.num_heads, cfg.num_kv_heads,
+                                  cfg.resolved_head_dim, layers=Ld),
+        "ln2": norm_schema(d, cfg.norm, layers=Ld),
+        "mlp": mlp_schema(d, cfg.d_ff, cfg.act, layers=Ld),
+    }
+    return {
+        "embed": embed_schema(cfg.vocab_size, d),
+        "encoder": enc,
+        "enc_final_norm": norm_schema(d, cfg.norm),
+        "decoder": dec,
+        "final_norm": norm_schema(d, cfg.norm),
+    }
+
+
+def _vlm_schema(cfg: ModelConfig):
+    d = cfg.d_model
+    k = cfg.cross_attn_every
+    G = cfg.num_layers // k                # groups of (k-1) self + 1 cross
+    base = _decoder_blocks_schema(cfg, (G, k - 1))
+    cross = {
+        "ln": norm_schema(d, cfg.norm, layers=G),
+        "xattn": attn.attn_schema(d, cfg.num_heads, cfg.num_kv_heads,
+                                  cfg.resolved_head_dim, layers=G),
+        "gate_attn": P((G,), ("layers",), init="zeros"),
+        "ln_mlp": norm_schema(d, cfg.norm, layers=G),
+        "mlp": mlp_schema(d, cfg.d_ff, cfg.act, layers=G),
+        "gate_mlp": P((G,), ("layers",), init="zeros"),
+    }
+    return {
+        "embed": embed_schema(cfg.vocab_size, d),
+        "groups": {"self": base, "cross": cross},
+        "final_norm": norm_schema(d, cfg.norm),
+    }
+
+
+def model_schema(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        s = _xlstm_schema(cfg)
+    elif cfg.family == "encdec":
+        s = _encdec_schema(cfg)
+    elif cfg.family == "vlm":
+        s = _vlm_schema(cfg)
+    else:
+        s = {
+            "embed": embed_schema(cfg.vocab_size, cfg.d_model),
+            "blocks": _decoder_blocks_schema(cfg, cfg.num_layers),
+            "final_norm": norm_schema(cfg.d_model, cfg.norm),
+        }
+    if not _tied(cfg):
+        s["lm_head"] = P((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=0.02)
+    return s
+
+
+def _tied(cfg: ModelConfig) -> bool:
+    return cfg.name.startswith(("gemma", "whisper"))
+
+
+def init_model(cfg: ModelConfig, seed=0, dtype=jnp.float32):
+    return init_params(model_schema(cfg), jax.random.PRNGKey(seed), dtype)
+
+
+def abstract_model(cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return abstract_params(model_schema(cfg), dtype)
+
+
+# ------------------------------------------------------------ block bodies
+
+def _attn_block(p, x, *, cfg, window, positions, rules, blockwise=True,
+                mamba_state=None):
+    # Megatron-SP: norm runs on the seq-sharded residual (16x cheaper),
+    # one all-gather recovers the full sequence for the heads-sharded
+    # attention interior, and the out-projection reduce-scatters back.
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    h = constrain(h, ("batch", None, None), rules)   # SP all-gather
+    q, k, v = attn.project_qkv(p["attn"], h, positions, cfg.rope_theta,
+                               use_rope=cfg.family not in ("encdec",),
+                               n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads)
+    q = constrain(q, ("batch", None, "act_heads", None), rules)
+    k = constrain(k, ("batch", None, "act_heads", None), rules)
+    v = constrain(v, ("batch", None, "act_heads", None), rules)
+    fn = attn.attend_blockwise if blockwise else attn.attend_full
+    kwargs = ({"q_chunk": cfg.attn_q_chunk, "kv_chunk": cfg.attn_kv_chunk}
+              if blockwise else {})
+
+    def attend(q, k, v, window):
+        return fn(q, k, v, q_positions=positions, k_positions=positions,
+                  causal=True, window=window, softcap=cfg.attn_logit_softcap,
+                  **kwargs)
+
+    if cfg.attn_remat and cfg.remat_policy != "nothing":
+        # Flash-style backward: never save the (S, S) probabilities — the
+        # inner checkpoint recomputes them per chunk in the backward pass.
+        # Redundant (a third recompute) when the whole block is already
+        # rematted with nothing_saveable (§Perf iteration 4).
+        attend = jax.checkpoint(
+            attend, policy=jax.checkpoint_policies.nothing_saveable)
+    o = attend(q, k, v, window)
+    o = attn.out_proj(p["attn"], o).astype(x.dtype)
+    if cfg.seq_parallel:
+        o = constrain(o, ("batch", "act_seq", None), rules)  # SP reduce-scatter
+    mstate = None
+    if cfg.family == "hybrid":
+        hm = apply_norm(p["ln_mamba"], x, cfg.norm)
+        hm = constrain(hm, ("batch", None, None), rules)
+        om, mstate = ssm.mamba_apply(p["mamba"], hm, mamba_state)
+        if cfg.seq_parallel:
+            om = constrain(om, ("batch", "act_seq", None), rules)
+        o = (o + om) * 0.5
+    x = x + o
+    return x, (k, v, mstate)
+
+
+def _ffn_block(p, x, *, cfg, rules):
+    h = apply_norm(p["ln2"], x, cfg.norm)
+    h = constrain(h, ("batch", None, None), rules)       # SP all-gather
+    aux = 0.0
+    if cfg.num_experts:
+        y, aux = moe_lib.apply_moe(p["moe"], h, cfg, rules=rules)
+        if cfg.dense_residual and "mlp" in p:
+            y = y + _mlp_tp(p["mlp"], h, cfg, rules)
+    else:
+        y = _mlp_tp(p["mlp"], h, cfg, rules)
+    if cfg.seq_parallel:
+        y = constrain(y, ("batch", "act_seq", None), rules)  # SP reduce-scatter
+    return x + y.astype(x.dtype), aux
+
+
+def _mlp_tp(p, h, cfg, rules):
+    """GLU/MLP with the hidden activations pinned ff-sharded (TP interior)."""
+    if cfg.act != "silu":
+        return apply_mlp(p, h, cfg.act)
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", h, p["wi_gate"]))
+    u = jnp.einsum("...d,df->...f", h, p["wi_up"])
+    gu = constrain(g * u, ("batch", None, "act_ff"), rules)
+    return jnp.einsum("...f,fd->...d", gu, p["wo"])
+
+
+def _maybe_remat(fn, cfg):
+    if not cfg.remat:
+        return fn
+    policy = {
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+    }[cfg.remat_policy]
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _sp(x, rules, cfg=None):
+    """Sequence-parallel residual stream: between blocks the (B, S, D)
+    activations live seq-sharded over "model" (Megatron-SP), so the
+    per-layer carries the backward scan saves shard 16x.  GSPMD inserts
+    the all-gather before attention/MLP and the reduce-scatter after.
+    Disabled per-config for recurrent families (EXPERIMENTS §Perf)."""
+    if cfg is not None and not cfg.seq_parallel:
+        return x
+    return constrain(x, ("batch", "act_seq", None), rules)
+
+
+# --------------------------------------------------------- train forwards
+
+def _decoder_forward(params, tokens, cfg, rules):
+    B, S = tokens.shape
+    x = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, ("batch", "seq", None), rules)
+    positions = jnp.arange(S)
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+
+    def block(carry, xs):
+        x, aux = carry
+        bp, window = xs
+        x = _sp(x, rules, cfg)
+        x, _ = _attn_block(bp, x, cfg=cfg, window=window, positions=positions,
+                           rules=rules)
+        x, a = _ffn_block(bp, x, cfg=cfg, rules=rules)
+        return (_sp(x, rules, cfg), aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        _maybe_remat(block, cfg), (x, 0.0), (params["blocks"], windows)
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, aux
+
+
+def _xlstm_forward(params, tokens, cfg, rules):
+    x = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, ("batch", "seq", None), rules)
+    g = params["groups"]
+
+    def m_block(x, bp):
+        # no SP here: the chunked mLSTM reshapes the sequence axis inside
+        # every block — a seq-sharded carry makes GSPMD re-gather per chunk
+        # (measured 6x memory-term regression; EXPERIMENTS §Perf).
+        h = apply_norm(bp["ln"], x, cfg.norm)
+        o, _ = ssm.mlstm_apply(bp["mlstm"], h)
+        return x + o, None
+
+    def group(x, gp):
+        x, _ = jax.lax.scan(
+            _maybe_remat(m_block, cfg), x,
+            {"ln": gp["m_ln"], "mlstm": gp["mlstm"]},
+        )
+        h = apply_norm(gp["s_ln"], x, cfg.norm)
+        o, _ = ssm.slstm_apply(gp["slstm"], h)
+        return x + o, None
+
+    x, _ = jax.lax.scan(group, x, g)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, 0.0
+
+
+def _encdec_forward(params, tokens, frame_embeddings, cfg, rules):
+    d = cfg.d_model
+    enc = frame_embeddings.astype(jnp.dtype(cfg.dtype))
+    enc = enc + _sinusoid(enc.shape[1], d, enc.dtype)
+    enc_pos = jnp.arange(enc.shape[1])
+
+    def enc_block(x, bp):
+        h = apply_norm(bp["ln1"], x, cfg.norm)
+        q, k, v = attn.project_qkv(bp["attn"], h, enc_pos, use_rope=False,
+                                   n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads)
+        o = attn.attend_full(q, k, v, q_positions=enc_pos, k_positions=enc_pos,
+                             causal=False)
+        x = x + attn.out_proj(bp["attn"], o)
+        h = apply_norm(bp["ln2"], x, cfg.norm)
+        return x + apply_mlp(bp["mlp"], h, cfg.act), None
+
+    enc, _ = jax.lax.scan(_maybe_remat(enc_block, cfg), enc, params["encoder"])
+    enc = apply_norm(params["enc_final_norm"], enc, cfg.norm)
+
+    x = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = x + _sinusoid(x.shape[1], d, x.dtype)
+    pos = jnp.arange(tokens.shape[1])
+
+    def dec_block(x, bp):
+        h = apply_norm(bp["ln1"], x, cfg.norm)
+        q, k, v = attn.project_qkv(bp["attn"], h, pos, use_rope=False,
+                                   n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads)
+        o = attn.attend_blockwise(q, k, v, q_positions=pos, k_positions=pos,
+                                  causal=True, q_chunk=cfg.attn_q_chunk,
+                                  kv_chunk=cfg.attn_kv_chunk)
+        x = x + attn.out_proj(bp["attn"], o)
+        h = apply_norm(bp["ln_x"], x, cfg.norm)
+        qx = attn.proj_heads(bp["xattn"]["wq"], h, cfg.num_heads)
+        kx = attn.proj_heads(bp["xattn"]["wk"], enc, cfg.num_kv_heads)
+        vx = attn.proj_heads(bp["xattn"]["wv"], enc, cfg.num_kv_heads)
+        ox = attn.attend_full(qx, kx, vx, q_positions=pos, k_positions=enc_pos,
+                              causal=False)
+        x = x + attn.out_proj(bp["xattn"], ox)
+        h = apply_norm(bp["ln2"], x, cfg.norm)
+        return x + apply_mlp(bp["mlp"], h, cfg.act), None
+
+    x, _ = jax.lax.scan(_maybe_remat(dec_block, cfg), x, params["decoder"])
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, 0.0
+
+
+def _vlm_forward(params, tokens, image_embeddings, cfg, rules):
+    x = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, ("batch", "seq", None), rules)
+    img = image_embeddings.astype(jnp.dtype(cfg.dtype))
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    img_pos = jnp.arange(img.shape[1])
+
+    def self_block(x, bp):
+        x, _ = _attn_block(bp, x, cfg=cfg, window=0, positions=positions,
+                           rules=rules)
+        x, _ = _ffn_block(bp, x, cfg=cfg, rules=rules)
+        return _sp(x, rules), None
+
+    def group(x, gp):
+        x, _ = jax.lax.scan(_maybe_remat(self_block, cfg), x, gp["self"])
+        cp = gp["cross"]
+        h = apply_norm(cp["ln"], x, cfg.norm)
+        qx = attn.proj_heads(cp["xattn"]["wq"], h, cfg.num_heads)
+        kx = attn.proj_heads(cp["xattn"]["wk"], img, cfg.num_kv_heads)
+        vx = attn.proj_heads(cp["xattn"]["wv"], img, cfg.num_kv_heads)
+        ox = attn.attend_full(qx, kx, vx, q_positions=positions,
+                              k_positions=img_pos, causal=False)
+        x = x + jnp.tanh(cp["gate_attn"]) * attn.out_proj(cp["xattn"], ox)
+        h = apply_norm(cp["ln_mlp"], x, cfg.norm)
+        x = x + jnp.tanh(cp["gate_mlp"]) * apply_mlp(cp["mlp"], h, cfg.act)
+        return x, None
+
+    x, _ = jax.lax.scan(group, x, params["groups"])
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, 0.0
+
+
+def _sinusoid(S, d, dtype):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)[None]
+
+
+def forward_train(params, batch, cfg: ModelConfig, rules=None):
+    """Final hidden states + aux loss for a train/prefill batch."""
+    tokens = batch["tokens"]
+    if cfg.family == "ssm":
+        return _xlstm_forward(params, tokens, cfg, rules)
+    if cfg.family == "encdec":
+        return _encdec_forward(params, tokens, batch["frame_embeddings"], cfg, rules)
+    if cfg.family == "vlm":
+        return _vlm_forward(params, tokens, batch["image_embeddings"], cfg, rules)
+    return _decoder_forward(params, tokens, cfg, rules)
+
+
+def _head_table(params, cfg):
+    return params.get("lm_head", params["embed"]["table"])
+
+
+def loss_fn(params, batch, cfg: ModelConfig, rules=None):
+    h, aux = forward_train(params, batch, cfg, rules)
+    nll = chunked_xent(h, _head_table(params, cfg), batch["labels"],
+                       cfg.loss_chunk, cfg.final_logit_softcap)
+    return nll + 0.01 * aux, {"nll": nll, "aux": aux}
+
+
+# ------------------------------------------------------------- decode path
+
+def _cache_dtypes(cfg):
+    return jnp.dtype(cfg.kv_cache_dtype), cfg.kv_cache_dtype == "int8"
+
+
+def _layer_cache_struct(cfg, L, batch, max_len, abstract):
+    hd = cfg.resolved_head_dim
+    kv_dt, quant = _cache_dtypes(cfg)
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else (
+        lambda s, d: jnp.zeros(s, d))
+    Ls = L if isinstance(L, tuple) else (L,)
+    c = {
+        "k": mk(Ls + (batch, max_len, cfg.num_kv_heads, hd), kv_dt),
+        "v": mk(Ls + (batch, max_len, cfg.num_kv_heads, hd), kv_dt),
+    }
+    if quant:
+        c["k_scale"] = mk(Ls + (batch, max_len, cfg.num_kv_heads), jnp.float32)
+        c["v_scale"] = mk(Ls + (batch, max_len, cfg.num_kv_heads), jnp.float32)
+    return c
+
+
+def _cache_struct(cfg: ModelConfig, batch, max_len, abstract):
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else (
+        lambda s, d: jnp.zeros(s, d))
+    if cfg.family == "ssm":
+        g = cfg.slstm_every
+        G = cfg.num_layers // g
+        hd = cfg.d_model // cfg.num_heads
+        c = {
+            "mlstm": {
+                "C": mk((G, g - 1, batch, cfg.num_heads, hd, hd), jnp.float32),
+                "n": mk((G, g - 1, batch, cfg.num_heads, hd), jnp.float32),
+                "m": mk((G, g - 1, batch, cfg.num_heads), jnp.float32),
+            },
+            "slstm": {
+                "c": mk((G, batch, cfg.num_heads, hd), jnp.float32),
+                "n": mk((G, batch, cfg.num_heads, hd), jnp.float32),
+                "m": mk((G, batch, cfg.num_heads, hd), jnp.float32),
+            },
+        }
+    elif cfg.family == "encdec":
+        Ld = cfg.num_layers - cfg.encoder_layers
+        enc_len = max_len // cfg.encoder_seq_divisor
+        hd = cfg.resolved_head_dim
+        c = {
+            "self": _layer_cache_struct(cfg, Ld, batch, max_len, abstract),
+            "cross_k": mk((Ld, batch, enc_len, cfg.num_kv_heads, hd), jnp.dtype(cfg.dtype)),
+            "cross_v": mk((Ld, batch, enc_len, cfg.num_kv_heads, hd), jnp.dtype(cfg.dtype)),
+            "enc_len": mk((), jnp.int32),
+        }
+    elif cfg.family == "vlm":
+        k = cfg.cross_attn_every
+        G = cfg.num_layers // k
+        hd = cfg.resolved_head_dim
+        c = {
+            "self": _layer_cache_struct(cfg, (G, k - 1), batch, max_len, abstract),
+            "cross_k": mk((G, batch, cfg.img_tokens, cfg.num_kv_heads, hd), jnp.dtype(cfg.dtype)),
+            "cross_v": mk((G, batch, cfg.img_tokens, cfg.num_kv_heads, hd), jnp.dtype(cfg.dtype)),
+        }
+    else:
+        c = _layer_cache_struct(cfg, cfg.num_layers, batch, max_len, abstract)
+        if cfg.family == "hybrid":
+            di = cfg.mamba_expand * cfg.d_model
+            c["mamba"] = {
+                "ssm": mk((cfg.num_layers, batch, di, cfg.ssm_state), jnp.float32),
+                "conv": mk((cfg.num_layers, batch, cfg.mamba_conv - 1, di), jnp.float32),
+            }
+    c["pos"] = mk((), jnp.int32)
+    return c
+
+
+def abstract_cache(cfg, batch, max_len):
+    return _cache_struct(cfg, batch, max_len, abstract=True)
+
+
+def init_decode_cache(cfg, batch, max_len):
+    return _cache_struct(cfg, batch, max_len, abstract=False)
+
+
+def _decode_attn_layer(bp, cache_l, x, *, cfg, window, pos, rules):
+    """One decoder layer, single-token decode. Returns (x, new_cache_l)."""
+    _, quant = _cache_dtypes(cfg)
+    h = apply_norm(bp["ln1"], x, cfg.norm)
+    q, k, v = attn.project_qkv(bp["attn"], h, pos[None], cfg.rope_theta,
+                               n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads)
+    # flash-decoding: q is tiny (one token) — replicate it over "model" so
+    # GSPMD keeps the KV cache length-sharded and computes partial softmax
+    # per shard, instead of all-gathering the cache to align with q's head
+    # sharding (§Perf decode iteration: 52.6 GB/step of AG -> stat-sized).
+    q = constrain(q, ("batch", None, None, None), rules)
+    new_cache = attn.update_cache(cache_l, k, v, pos, quant)
+    kc, vc = attn.read_cache(new_cache, jnp.dtype(cfg.dtype))
+    o = attn.decode_attend(q, kc, vc, q_pos=pos, cache_len=pos + 1,
+                           window=window, softcap=cfg.attn_logit_softcap)
+    o = attn.out_proj(bp["attn"], o)
+    if cfg.family == "hybrid":
+        hm = apply_norm(bp["ln_mamba"], x, cfg.norm)
+        om, mstate = ssm.mamba_decode(bp["mamba"], hm, cache_l["mamba"])
+        o = (o + om) * 0.5
+        new_cache["mamba"] = mstate
+    x = x + o
+    x, _ = _ffn_block(bp, x, cfg=cfg, rules=rules)
+    return x, new_cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, rules=None):
+    """One serve step: (B, 1) new tokens vs the cache. Returns (logits, cache)."""
+    pos = cache["pos"]
+    x = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.dtype))
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+
+    if cfg.family == "ssm":
+        x, new_cache = _xlstm_decode(params, cache, x, cfg)
+    elif cfg.family == "encdec":
+        x, new_cache = _encdec_decode(params, cache, x, cfg, pos, rules)
+    elif cfg.family == "vlm":
+        x, new_cache = _vlm_decode(params, cache, x, cfg, pos, rules)
+    else:
+        layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+        if cfg.family == "hybrid":
+            mamba = layer_cache.pop("mamba")
+            layer_cache = dict(layer_cache, mamba=mamba)
+
+        def block(x, xs):
+            bp, cl, window = xs
+            x, ncl = _decode_attn_layer(bp, cl, x, cfg=cfg, window=window,
+                                        pos=pos, rules=rules)
+            return x, ncl
+
+        x, new_cache = jax.lax.scan(block, x, (params["blocks"], layer_cache, windows))
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+
+    new_cache["pos"] = pos + 1
+    logits = jnp.einsum(
+        "bsd,vd->bsv", x.astype(jnp.float32),
+        _head_table(params, cfg).astype(jnp.float32),
+    )
+    if cfg.final_logit_softcap:
+        logits = jnp.tanh(logits / cfg.final_logit_softcap) * cfg.final_logit_softcap
+    return logits, new_cache
+
+
+def _xlstm_decode(params, cache, x, cfg):
+    def m_block(x, xs):
+        bp, st = xs
+        h = apply_norm(bp["ln"], x, cfg.norm)
+        o, st = ssm.mlstm_decode(bp["mlstm"], h, st)
+        return x + o, st
+
+    def group(x, xs):
+        gp, mc, sc = xs
+        x, m_new = jax.lax.scan(
+            m_block, x, ({"ln": gp["m_ln"], "mlstm": gp["mlstm"]}, mc)
+        )
+        h = apply_norm(gp["s_ln"], x, cfg.norm)
+        o, s_new = ssm.slstm_decode(gp["slstm"], h, sc)
+        return x + o, (m_new, s_new)
+
+    x, (m_new, s_new) = jax.lax.scan(
+        group, x, (params["groups"], cache["mlstm"], cache["slstm"])
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, {"mlstm": m_new, "slstm": s_new}
+
+
+def _encdec_decode(params, cache, x, cfg, pos, rules):
+    x = x + _sinusoid_at(pos, cfg.d_model, x.dtype)
+    _, quant = _cache_dtypes(cfg)
+
+    def block(x, xs):
+        bp, cl, ck, cv = xs
+        h = apply_norm(bp["ln1"], x, cfg.norm)
+        q, k, v = attn.project_qkv(bp["attn"], h, pos[None], use_rope=False,
+                                   n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads)
+        ncl = attn.update_cache(cl, k, v, pos, quant)
+        kc, vc = attn.read_cache(ncl, jnp.dtype(cfg.dtype))
+        o = attn.decode_attend(q, kc, vc, q_pos=pos, cache_len=pos + 1)
+        x = x + attn.out_proj(bp["attn"], o)
+        h = apply_norm(bp["ln_x"], x, cfg.norm)
+        qx = attn.proj_heads(bp["xattn"]["wq"], h, cfg.num_heads)
+        ox = attn.decode_attend(qx, ck.astype(x.dtype), cv.astype(x.dtype),
+                                q_pos=jnp.asarray(2**30),
+                                cache_len=cache["enc_len"])
+        x = x + attn.out_proj(bp["xattn"], ox)
+        h = apply_norm(bp["ln2"], x, cfg.norm)
+        x = x + apply_mlp(bp["mlp"], h, cfg.act)
+        return x, ncl
+
+    x, self_new = jax.lax.scan(
+        block, x,
+        (params["decoder"], cache["self"], cache["cross_k"], cache["cross_v"]),
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, dict(cache, self=self_new)
+
+
+def _vlm_decode(params, cache, x, cfg, pos, rules):
+    def self_block(x, xs):
+        bp, cl = xs
+        x, ncl = _decode_attn_layer(bp, cl, x, cfg=cfg, window=0, pos=pos,
+                                    rules=rules)
+        return x, ncl
+
+    def group(x, xs):
+        gp, cl, ck, cv = xs
+        x, ncl = jax.lax.scan(self_block, x, (gp["self"], cl))
+        cp = gp["cross"]
+        h = apply_norm(cp["ln"], x, cfg.norm)
+        qx = attn.proj_heads(cp["xattn"]["wq"], h, cfg.num_heads)
+        ox = attn.decode_attend(qx, ck.astype(x.dtype), cv.astype(x.dtype),
+                                q_pos=jnp.asarray(2**30), cache_len=ck.shape[1])
+        x = x + jnp.tanh(cp["gate_attn"]) * attn.out_proj(cp["xattn"], ox)
+        h = apply_norm(cp["ln_mlp"], x, cfg.norm)
+        x = x + jnp.tanh(cp["gate_mlp"]) * apply_mlp(cp["mlp"], h, cfg.act)
+        return x, ncl
+
+    x, self_new = jax.lax.scan(
+        group, x, (params["groups"], cache["self"], cache["cross_k"], cache["cross_v"])
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, dict(cache, self=self_new)
+
+
+def _sinusoid_at(pos, d, dtype):
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10_000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None].astype(dtype)
+
+
+# ----------------------------------------------------------------- prefill
+
+def prefill(params, batch, cfg: ModelConfig, max_len=None, rules=None):
+    """Process a full prompt; returns (last-position logits, populated cache).
+
+    Uses the train forward for hidden states plus a second pass collecting
+    K/V per layer (keeps the scan structures identical; XLA CSEs the shared
+    projections).  For the dry-run cells this is lowered as one XLA program.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    h, _ = forward_train(params, batch, cfg, rules)
+    logits = jnp.einsum(
+        "bd,vd->bv", h[:, -1].astype(jnp.float32),
+        _head_table(params, cfg).astype(jnp.float32),
+    )
+    if cfg.final_logit_softcap:
+        logits = jnp.tanh(logits / cfg.final_logit_softcap) * cfg.final_logit_softcap
+    cache = _prefill_cache(params, batch, cfg, max_len, rules)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return logits, cache
+
+
+def _prefill_cache(params, batch, cfg, max_len, rules):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    _, quant = _cache_dtypes(cfg)
+    if cfg.family == "ssm":
+        x = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.dtype))
+
+        def m_block(x, bp):
+            h = apply_norm(bp["ln"], x, cfg.norm)
+            hd = cfg.d_model // cfg.num_heads
+            o, st = ssm.mlstm_apply(bp["mlstm"], h,
+                                    ssm.mlstm_init_state(B, cfg.num_heads, hd))
+            return x + o, st
+
+        def group(x, gp):
+            x, m_st = jax.lax.scan(m_block, x, {"ln": gp["m_ln"], "mlstm": gp["mlstm"]})
+            h = apply_norm(gp["s_ln"], x, cfg.norm)
+            hd = cfg.d_model // cfg.num_heads
+            o, s_st = ssm.slstm_apply(gp["slstm"], h,
+                                      ssm.slstm_init_state(B, cfg.num_heads, hd))
+            return x + o, (m_st, s_st)
+
+        _, (m_st, s_st) = jax.lax.scan(group, x, params["groups"])
+        return {"mlstm": m_st, "slstm": s_st}
+
+    # attention families: collect K/V per layer and pack into cache arrays
+    x = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(S)
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+
+    if cfg.family in ("dense", "moe", "hybrid"):
+        empty = init_decode_cache(cfg, B, max_len)
+
+        def block(x, xs):
+            bp, window, cl = xs
+            ms = cl.get("mamba")
+            x, (k, v, mstate) = _attn_block(
+                bp, x, cfg=cfg, window=window, positions=positions,
+                rules=rules, mamba_state=ms,
+            )
+            x, _ = _ffn_block(bp, x, cfg=cfg, rules=rules)
+            ncl = attn.update_cache(
+                {kk: vv for kk, vv in cl.items() if kk != "mamba"}, k, v, 0, quant
+            )
+            if mstate is not None:
+                ncl["mamba"] = mstate
+            return x, ncl
+
+        layer_cache = {k: v for k, v in empty.items() if k != "pos"}
+        _, new_cache = jax.lax.scan(block, x, (params["blocks"], windows, layer_cache))
+        return new_cache
+
+    if cfg.family == "encdec":
+        return _encdec_prefill_cache(params, batch, cfg, max_len, rules, quant)
+    if cfg.family == "vlm":
+        return _vlm_prefill_cache(params, batch, cfg, max_len, rules, quant)
+    raise NotImplementedError(f"prefill for family {cfg.family}")
+
+
+def _encdec_prefill_cache(params, batch, cfg, max_len, rules, quant):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    d = cfg.d_model
+    enc = batch["frame_embeddings"].astype(jnp.dtype(cfg.dtype))
+    enc = enc + _sinusoid(enc.shape[1], d, enc.dtype)
+    enc_pos = jnp.arange(enc.shape[1])
+
+    def enc_block(x, bp):
+        h = apply_norm(bp["ln1"], x, cfg.norm)
+        q, k, v = attn.project_qkv(bp["attn"], h, enc_pos, use_rope=False,
+                                   n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads)
+        o = attn.attend_full(q, k, v, q_positions=enc_pos, k_positions=enc_pos,
+                             causal=False)
+        x = x + attn.out_proj(bp["attn"], o)
+        h = apply_norm(bp["ln2"], x, cfg.norm)
+        return x + apply_mlp(bp["mlp"], h, cfg.act), None
+
+    enc, _ = jax.lax.scan(enc_block, enc, params["encoder"])
+    enc = apply_norm(params["enc_final_norm"], enc, cfg.norm)
+
+    x = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = x + _sinusoid(S, d, x.dtype)
+    pos = jnp.arange(S)
+    empty = init_decode_cache(cfg, B, max_len)
+
+    def dec_block(x, xs):
+        bp, cl = xs
+        h = apply_norm(bp["ln1"], x, cfg.norm)
+        q, k, v = attn.project_qkv(bp["attn"], h, pos, use_rope=False,
+                                   n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads)
+        o = attn.attend_blockwise(q, k, v, q_positions=pos, k_positions=pos,
+                                  causal=True, q_chunk=cfg.attn_q_chunk,
+                                  kv_chunk=cfg.attn_kv_chunk)
+        x = x + attn.out_proj(bp["attn"], o)
+        h = apply_norm(bp["ln_x"], x, cfg.norm)
+        qx = attn.proj_heads(bp["xattn"]["wq"], h, cfg.num_heads)
+        kx = attn.proj_heads(bp["xattn"]["wk"], enc, cfg.num_kv_heads)
+        vx = attn.proj_heads(bp["xattn"]["wv"], enc, cfg.num_kv_heads)
+        ox = attn.attend_full(qx, kx, vx, q_positions=pos,
+                              k_positions=enc_pos, causal=False)
+        x = x + attn.out_proj(bp["xattn"], ox)
+        h = apply_norm(bp["ln2"], x, cfg.norm)
+        x = x + apply_mlp(bp["mlp"], h, cfg.act)
+        ncl = attn.update_cache(cl, k, v, 0, quant)
+        dt = jnp.dtype(cfg.dtype)
+        return x, (ncl, kx.astype(dt), vx.astype(dt))
+
+    _, (self_new, cross_k, cross_v) = jax.lax.scan(
+        dec_block, x, (params["decoder"], empty["self"]))
+    # cross arrays are sized for max_len//divisor; pad the computed ones
+    enc_len = jnp.asarray(cross_k.shape[2], jnp.int32)
+    pad = empty["cross_k"].shape[2] - cross_k.shape[2]
+    if pad > 0:
+        cross_k = jnp.pad(cross_k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cross_v = jnp.pad(cross_v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return {"self": self_new, "cross_k": cross_k, "cross_v": cross_v,
+            "enc_len": enc_len}
+
+
+def _vlm_prefill_cache(params, batch, cfg, max_len, rules, quant):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    img = batch["image_embeddings"].astype(jnp.dtype(cfg.dtype))
+    x = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, ("batch", "seq", None), rules)
+    positions = jnp.arange(S)
+    img_pos = jnp.arange(img.shape[1])
+    empty = init_decode_cache(cfg, B, max_len)
+
+    def self_block(x, xs):
+        bp, cl = xs
+        x, (k, v, _) = _attn_block(bp, x, cfg=cfg, window=0,
+                                   positions=positions, rules=rules)
+        x, _ = _ffn_block(bp, x, cfg=cfg, rules=rules)
+        return x, attn.update_cache(cl, k, v, 0, quant)
+
+    def group(x, xs):
+        gp, cl = xs
+        x, ncl = jax.lax.scan(self_block, x, (gp["self"], cl))
+        cp = gp["cross"]
+        h = apply_norm(cp["ln"], x, cfg.norm)
+        qx = attn.proj_heads(cp["xattn"]["wq"], h, cfg.num_heads)
+        kx = attn.proj_heads(cp["xattn"]["wk"], img, cfg.num_kv_heads)
+        vx = attn.proj_heads(cp["xattn"]["wv"], img, cfg.num_kv_heads)
+        ox = attn.attend_full(qx, kx, vx, q_positions=positions,
+                              k_positions=img_pos, causal=False)
+        x = x + jnp.tanh(cp["gate_attn"]) * attn.out_proj(cp["xattn"], ox)
+        h = apply_norm(cp["ln_mlp"], x, cfg.norm)
+        x = x + jnp.tanh(cp["gate_mlp"]) * apply_mlp(cp["mlp"], h, cfg.act)
+        dt = jnp.dtype(cfg.dtype)
+        return x, (ncl, kx.astype(dt), vx.astype(dt))
+
+    _, (self_new, cross_k, cross_v) = jax.lax.scan(
+        group, x, (params["groups"], empty["self"]))
+    return {"self": self_new, "cross_k": cross_k, "cross_v": cross_v}
+
+
+# ------------------------------------------------------- partition specs
+
+def cache_partition_specs(cfg: ModelConfig, rules):
+    """PartitionSpec tree mirroring ``abstract_cache`` (DESIGN.md §5)."""
+    from jax.sharding import PartitionSpec as PS
+
+    b = rules.get("batch")
+    kv = rules.get("kv_len")
+    hm = rules.get("act_heads")
+    fm = rules.get("act_ff")
+
+    def kv_spec(lead_n):
+        # KV sequence axis carries the model-parallel split (always divisible,
+        # unlike head counts); heads stay replicated within a shard.
+        lead = (None,) * lead_n
+        s = {
+            "k": PS(*lead, b, kv, None, None),
+            "v": PS(*lead, b, kv, None, None),
+        }
+        if cfg.kv_cache_dtype == "int8":
+            s["k_scale"] = PS(*lead, b, kv, None)
+            s["v_scale"] = PS(*lead, b, kv, None)
+        return s
+
+    if cfg.family == "ssm":
+        c = {
+            "mlstm": {
+                "C": PS(None, None, b, None, fm, None),
+                "n": PS(None, None, b, None, fm),
+                "m": PS(None, None, b, None),
+            },
+            "slstm": {
+                "c": PS(None, b, None, fm),
+                "n": PS(None, b, None, fm),
+                "m": PS(None, b, None, fm),
+            },
+        }
+    elif cfg.family == "encdec":
+        c = {
+            "self": kv_spec(1),
+            "cross_k": PS(None, b, None, None, None),
+            "cross_v": PS(None, b, None, None, None),
+            "enc_len": PS(),
+        }
+    elif cfg.family == "vlm":
+        c = {
+            "self": kv_spec(2),
+            "cross_k": PS(None, b, None, None, None),
+            "cross_v": PS(None, b, None, None, None),
+        }
+    else:
+        c = kv_spec(1)
+        if cfg.family == "hybrid":
+            c["mamba"] = {
+                "ssm": PS(None, b, fm, None),
+                "conv": PS(None, b, None, fm),
+            }
+    c["pos"] = PS()
+    return c
+
+
+def batch_partition_specs(cfg: ModelConfig, shape_kind, rules):
+    from jax.sharding import PartitionSpec as PS
+
+    b = rules.get("batch")
+    sq = rules.get("seq")
+    specs = {"tokens": PS(b, sq if shape_kind != "decode" else None)}
+    if shape_kind == "train":
+        specs["labels"] = PS(b, sq)
+    if cfg.family == "encdec":
+        specs["frame_embeddings"] = PS(b, None, None)
+    if cfg.family == "vlm":
+        specs["image_embeddings"] = PS(b, None, None)
+    return specs

@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing with *local* dispatch.
+
+Ranking/capacity are computed per batch row (cumsum along the sequence only)
+so no collective crosses the batch sharding during dispatch; the only
+communication is the token->expert exchange implied by re-sharding the
+capacity buffer from batch-sharded to expert-sharded (GSPMD lowers it as an
+all-to-all — §Perf arctic iteration; the global-cumsum scatter baseline
+generated collective-permute chains instead).
+
+Capacity semantics: per-row GShard-style dropping (tokens beyond
+``capacity_factor * S * k / E`` slots within their own row drop).  Supports
+shared experts (qwen2-moe) and a dense parallel residual (arctic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.schema import P, lead
+
+__all__ = ["moe_schema", "apply_moe"]
+
+
+def moe_schema(cfg, layers=None):
+    d, fe = cfg.d_model, cfg.moe_d_ff
+    E = cfg.num_experts
+    pre, ax = lead(layers)
+    s = {
+        "router": P(pre + (d, E), ax + ("embed", None), scale=0.02),
+        "experts": {
+            "wi_gate": P(pre + (E, d, fe), ax + ("experts", "embed", "expert_ff")),
+            "wi_up": P(pre + (E, d, fe), ax + ("experts", "embed", "expert_ff")),
+            "wo": P(pre + (E, fe, d), ax + ("experts", "expert_ff", "embed")),
+        },
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.num_shared_experts * fe  # qwen2-moe: fused shared expert
+        s["shared"] = {
+            "wi_gate": P(pre + (d, fs), ax + ("embed", "ff")),
+            "wi_up": P(pre + (d, fs), ax + ("embed", "ff")),
+            "wo": P(pre + (fs, d), ax + ("ff", "embed")),
+        }
+        s["shared_gate"] = P(pre + (d,), ax + ("embed",), scale=0.02)
+    return s
+
+
+def _expert_ffn(experts, x):
+    """x: (E, C, D) -> (E, C, D); batched GLU over the expert dim."""
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, experts["wi_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", x, experts["wi_up"])
+    return jnp.einsum("ecf,efd->ecd", g * u, experts["wo"])
+
+
+def apply_moe(p, x, cfg, rules=None):
+    """x: (B, S, D) -> (B, S, D), plus the Switch load-balancing aux loss."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e  (global means)
+    me = probs.mean((0, 1))
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=(0, 1, 2))
+    aux = E * jnp.sum(me * ce)
+
+    cap = int(cfg.capacity_factor * S * k / E) + 1
+
+    flat_e = expert_ids.reshape(B, S * k)                     # (B, S*k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    rank = jnp.cumsum(onehot, axis=1) - 1                     # local to the row
+    my_rank = jnp.take_along_axis(rank, flat_e[:, :, None], axis=2)[..., 0]
+    valid = my_rank < cap
+    slot = jnp.where(valid, flat_e * cap + my_rank, E * cap)  # (B, S*k)
+
+    x_rep = jnp.repeat(x, k, axis=1)                          # (B, S*k, D)
+    rows = jnp.arange(B)[:, None]
+    buf = jnp.zeros((B, E * cap + 1, D), x.dtype).at[rows, slot].add(x_rep)
+    ebuf = buf[:, :-1].reshape(B, E, cap, D)
+    # token -> expert exchange: batch-sharded -> expert-sharded (all-to-all)
+    ebuf = constrain(ebuf, (None, "experts", None, None), rules)
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", ebuf, p["experts"]["wi_gate"]))
+    u = jnp.einsum("becd,edf->becf", ebuf, p["experts"]["wi_up"])
+    h = jnp.einsum("becf,efd->becd", g * u, p["experts"]["wo"])
+    # expert -> token exchange back
+    h = constrain(h, ("batch", None, None, None), rules)
+    h = h.reshape(B, E * cap, D)
+    h = jnp.concatenate([h, jnp.zeros((B, 1, D), h.dtype)], axis=1)
+    y = (h[rows, slot] * gate_vals.reshape(B, S * k, 1).astype(h.dtype))
+    y = y.reshape(B, S, k, D).sum(2)
+
+    if "shared" in p:  # qwen2-moe: always-on shared expert, sigmoid-gated
+        sh = p["shared"]
+        xf = x.reshape(B * S, D)
+        g = jax.nn.silu(jnp.einsum("nd,df->nf", xf, sh["wi_gate"]))
+        u = jnp.einsum("nd,df->nf", xf, sh["wi_up"])
+        ys = jnp.einsum("nf,fd->nd", g * u, sh["wo"])
+        sg = jax.nn.sigmoid(jnp.einsum("nd,d->n", xf.astype(jnp.float32),
+                                       p["shared_gate"].astype(jnp.float32)))
+        y = y + (ys * sg[:, None].astype(y.dtype)).reshape(B, S, D)
+    return y, aux

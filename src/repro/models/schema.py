@@ -1,0 +1,96 @@
+"""Parameter schemas: one declaration -> real init, abstract init, shardings.
+
+Every model declares its parameters as a nested dict of ``P(shape, axes)``
+leaves, where ``axes`` are *logical* axis names ("embed", "heads", "ff",
+"vocab", "experts", "layers", ...).  From that single declaration we derive:
+
+* ``init_params``      — real, deterministically-seeded arrays (smoke tests);
+* ``abstract_params``  — ``jax.ShapeDtypeStruct`` tree (dry-run lowering —
+                          full-size models are never allocated);
+* ``partition_specs``  — ``PartitionSpec`` tree via the run's logical->mesh
+                          axis rules (``repro.distributed.sharding``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["P", "init_params", "abstract_params", "map_schema", "lead"]
+
+
+def lead(layers):
+    """(shape-prefix, axes-prefix) for stacked-layer params.
+
+    ``layers`` may be None (unstacked), an int (one scan level) or a tuple
+    (nested scans, e.g. (groups, layers-per-group))."""
+    if layers is None:
+        return (), ()
+    if isinstance(layers, int):
+        layers = (layers,)
+    return tuple(layers), ("layers",) * len(layers)
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """One parameter declaration."""
+    shape: tuple
+    axes: tuple            # logical axis name (or None) per dim
+    init: str = "normal"   # normal | zeros | ones
+    scale: Optional[float] = None  # default: 1/sqrt(fan_in-ish)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_leaf(x):
+    return isinstance(x, P)
+
+
+def map_schema(fn, schema):
+    return jax.tree_util.tree_map(fn, schema, is_leaf=_is_leaf)
+
+
+def _leaf_scale(p: P) -> float:
+    if p.scale is not None:
+        return p.scale
+    fan_in = p.shape[0] if len(p.shape) >= 2 else max(p.shape[-1], 1)
+    # stacked-layer params: fan-in is the second axis
+    if p.axes and p.axes[0] == "layers" and len(p.shape) >= 3:
+        fan_in = p.shape[1]
+    return 1.0 / float(np.sqrt(max(fan_in, 1)))
+
+
+def init_params(schema, rng, dtype=jnp.float32):
+    """Materialise real parameters (used at smoke scale only)."""
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(
+        schema, is_leaf=_is_leaf
+    )[0]
+
+    out = {}
+    for path, p in leaves_with_path:
+        key = jax.random.fold_in(rng, hash(jax.tree_util.keystr(path)) % 2**31)
+        if p.init == "zeros":
+            val = jnp.zeros(p.shape, dtype)
+        elif p.init == "ones":
+            val = jnp.ones(p.shape, dtype)
+        else:
+            val = (jax.random.normal(key, p.shape, dtype) * _leaf_scale(p)).astype(dtype)
+        _set_path(out, path, val)
+    return out
+
+
+def abstract_params(schema, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — dry-run stand-in, no allocation."""
+    return map_schema(lambda p: jax.ShapeDtypeStruct(p.shape, dtype), schema)
+
+
+def _set_path(tree, path, val):
+    node = tree
+    keys = [k.key for k in path]
+    for k in keys[:-1]:
+        node = node.setdefault(k, {})
+    node[keys[-1]] = val

@@ -1,0 +1,291 @@
+"""Recurrent sequence mixers: xLSTM (mLSTM + sLSTM) and Mamba-style SSM.
+
+All three expose a parallel/chunked *train* form plus an O(1)-state *decode*
+step — the property that makes the ``long_500k`` cell feasible for the
+ssm/hybrid archs (DESIGN.md §6.9).
+
+* mLSTM (xLSTM, arXiv:2405.04517): matrix-memory cell, chunked-parallel
+  within ``chunk`` tokens and recurrent across chunks (carry C, n, m).
+* sLSTM: scalar-memory cell with exponential gating — inherently sequential,
+  implemented as a ``lax.scan`` over time.
+* Mamba (arXiv:2312.00752): selective diagonal SSM via associative scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.schema import P, lead
+
+__all__ = [
+    "mlstm_schema", "mlstm_apply", "mlstm_decode", "mlstm_init_state",
+    "slstm_schema", "slstm_apply", "slstm_decode", "slstm_init_state",
+    "mamba_schema", "mamba_apply", "mamba_decode", "mamba_init_state",
+]
+
+
+# ------------------------------------------------------------------- mLSTM
+
+def mlstm_schema(d, n_heads, layers=None):
+    hd = d // n_heads
+    pre, ax = lead(layers)
+    return {
+        "wq": P(pre + (d, d), ax + ("embed", "heads")),
+        "wk": P(pre + (d, d), ax + ("embed", "heads")),
+        "wv": P(pre + (d, d), ax + ("embed", "heads")),
+        "wi": P(pre + (d, n_heads), ax + ("embed", None), scale=0.02),
+        "wf": P(pre + (d, n_heads), ax + ("embed", None), scale=0.02),
+        "bf": P(pre + (n_heads,), ax + (None,), init="ones"),
+        "wo": P(pre + (d, d), ax + ("heads", "embed")),
+        "gate": P(pre + (d, d), ax + ("embed", None), scale=0.02),
+    }
+
+
+def _heads(x, h):
+    B, S, E = x.shape
+    return x.reshape(B, S, h, E // h)
+
+
+def _mlstm_proj(p, x, n_heads):
+    q = _heads(jnp.einsum("bsd,de->bse", x, p["wq"]), n_heads)
+    k = _heads(jnp.einsum("bsd,de->bse", x, p["wk"]), n_heads) / jnp.sqrt(q.shape[-1])
+    v = _heads(jnp.einsum("bsd,de->bse", x, p["wv"]), n_heads)
+    logi = jnp.einsum("bsd,dh->bsh", x, p["wi"]).astype(jnp.float32)
+    logf = (jnp.einsum("bsd,dh->bsh", x, p["wf"]) + p["bf"]).astype(jnp.float32)
+    logf = -jax.nn.softplus(-logf)  # log sigmoid
+    return q, k, v, logi, logf
+
+
+def mlstm_init_state(batch, n_heads, hd):
+    return {
+        "C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+def mlstm_apply(p, x, state=None, chunk=256):
+    """x: (B, S, D). Chunkwise-parallel mLSTM; returns (y, final_state)."""
+    B, S, D = x.shape
+    H = p["wi"].shape[-1]
+    hd = p["wq"].shape[-1] // H
+    chunk = min(chunk, S)
+    if S % chunk:  # pad to a chunk multiple (masked by gates ~ benign for smoke)
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    q, k, v, logi, logf = _mlstm_proj(p, x, H)
+    Sp = x.shape[1]
+    n_chunks = Sp // chunk
+
+    def to_chunks(a):
+        return a.reshape(B, n_chunks, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, lic, lfc = map(to_chunks, (q, k, v, logi, logf))
+    state = state or mlstm_init_state(B, H, hd)
+
+    def step(carry, xs):
+        C, n, m = carry["C"], carry["n"], carry["m"]
+        qi, ki, vi, li, lf = xs  # (B, c, H, ...)
+        csum = jnp.cumsum(lf, axis=1)                      # within-chunk log decay
+        total = csum[:, -1]                                # (B, H)
+        # log "a" for inter-chunk carry-in and "b" for writing to the carry
+        log_in = li + (total[:, None] - csum)              # decay to chunk end
+        m_new = jnp.maximum(m + total, log_in.max(1))      # (B, H) stabiliser
+        # intra-chunk attention-like term
+        decay = csum[:, :, None, :] - csum[:, None, :, :]  # (B, t, s, H) t>=s
+        logD = decay + li[:, None]                         # + log i_s
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        logD = jnp.where(mask[None, :, :, None], logD, -jnp.inf)
+        row_m = jnp.maximum(logD.max(2), m[:, None] + csum)  # (B, t, H)
+        Dmat = jnp.exp(logD - row_m[:, :, None])
+        s = jnp.einsum("bthk,bshk->btsh", qi, ki).astype(jnp.float32)
+        intra = jnp.einsum("btsh,btsh,bshk->bthk", s, Dmat, vi.astype(jnp.float32))
+        norm_intra = jnp.einsum("btsh,btsh->bth", s, Dmat)
+        # inter-chunk: carry state decayed to each position
+        carry_scale = jnp.exp(m[:, None] + csum - row_m)   # (B, t, H)
+        inter = jnp.einsum("bthk,bhkl->bthl", qi.astype(jnp.float32), C) * carry_scale[..., None]
+        norm_inter = jnp.einsum("bthk,bhk->bth", qi.astype(jnp.float32), n) * carry_scale
+        num = intra + inter
+        den = jnp.abs(norm_intra + norm_inter) + jnp.exp(-row_m)
+        y = num / jnp.maximum(den, 1e-6)[..., None]
+        # update carry
+        w = jnp.exp(log_in - m_new[:, None])               # (B, c, H)
+        C = C * jnp.exp(m + total - m_new)[..., None, None] + jnp.einsum(
+            "bsh,bshk,bshl->bhkl", w, ki.astype(jnp.float32), vi.astype(jnp.float32)
+        )
+        n = n * jnp.exp(m + total - m_new)[..., None] + jnp.einsum(
+            "bsh,bshk->bhk", w, ki.astype(jnp.float32)
+        )
+        return {"C": C, "n": n, "m": m_new}, y.astype(x.dtype)
+
+    state, yc = jax.lax.scan(step, state, (qc, kc, vc, lic, lfc))
+    y = yc.swapaxes(0, 1).reshape(B, Sp, H * hd)[:, :S]
+    g = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x[:, :S], p["gate"]))
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"]) * g
+    return out, state
+
+
+def mlstm_decode(p, x, state):
+    """x: (B, 1, D) single step. Returns (y, new_state)."""
+    H = p["wi"].shape[-1]
+    q, k, v, logi, logf = _mlstm_proj(p, x, H)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]          # (B, H, hd)
+    li, lf = logi[:, 0], logf[:, 0]              # (B, H)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)[..., None, None]
+    iw = jnp.exp(li - m_new)[..., None, None]
+    C = C * fw + iw * (k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :])
+    n = n * fw[..., 0] + iw[..., 0] * k.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkl->bhl", q.astype(jnp.float32), C)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), n)) + jnp.exp(-m_new)
+    y = (num / jnp.maximum(den, 1e-6)[..., None]).astype(x.dtype)
+    g = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["gate"]))
+    B, Hh, hd = y.shape
+    out = jnp.einsum("be,ed->bd", y.reshape(B, Hh * hd), p["wo"])[:, None] * g
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ------------------------------------------------------------------- sLSTM
+
+def slstm_schema(d, n_heads, layers=None):
+    hd = d // n_heads
+    pre, ax = lead(layers)
+    return {
+        "wz": P(pre + (d, d), ax + ("embed", "heads")),
+        "wi": P(pre + (d, d), ax + ("embed", "heads"), scale=0.02),
+        "wf": P(pre + (d, d), ax + ("embed", "heads"), scale=0.02),
+        "bf": P(pre + (n_heads, hd), ax + (None, None), init="ones"),
+        "wo_gate": P(pre + (d, d), ax + ("embed", "heads"), scale=0.02),
+        "wo": P(pre + (d, d), ax + ("heads", "embed")),
+    }
+
+
+def slstm_init_state(batch, n_heads, hd):
+    z = jnp.zeros((batch, n_heads, hd), jnp.float32)
+    return {"c": z, "n": z, "m": z - 1e30}
+
+
+def _slstm_gates(p, x):
+    H, hd = p["bf"].shape[-2], p["bf"].shape[-1]
+    z = jnp.tanh(_heads(jnp.einsum("bsd,de->bse", x, p["wz"]), H).astype(jnp.float32))
+    li = _heads(jnp.einsum("bsd,de->bse", x, p["wi"]), H).astype(jnp.float32)
+    lf = (_heads(jnp.einsum("bsd,de->bse", x, p["wf"]), H) + p["bf"]).astype(jnp.float32)
+    lf = -jax.nn.softplus(-lf)
+    o = jax.nn.sigmoid(_heads(jnp.einsum("bsd,de->bse", x, p["wo_gate"]), H).astype(jnp.float32))
+    return z, li, lf, o
+
+
+def _slstm_step(state, xs):
+    z, li, lf, o = xs
+    c, n, m = state["c"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)
+    iw = jnp.exp(li - m_new)
+    c = fw * c + iw * z
+    n = fw * n + iw
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "m": m_new}, h
+
+
+def slstm_apply(p, x, state=None):
+    B, S, D = x.shape
+    H, hd = p["bf"].shape
+    z, li, lf, o = _slstm_gates(p, x)
+    state = state or slstm_init_state(B, H, hd)
+    xs = tuple(a.swapaxes(0, 1) for a in (z, li, lf, o))  # (S, B, H, hd)
+    state, h = jax.lax.scan(_slstm_step, state, xs)
+    h = h.swapaxes(0, 1).astype(x.dtype)
+    B, S, H, hd = h.shape
+    return jnp.einsum("bse,ed->bsd", h.reshape(B, S, H * hd), p["wo"]), state
+
+
+def slstm_decode(p, x, state):
+    z, li, lf, o = _slstm_gates(p, x)
+    state, h = _slstm_step(state, tuple(a[:, 0] for a in (z, li, lf, o)))
+    B, H, hd = h.shape
+    out = jnp.einsum("be,ed->bd", h.astype(x.dtype).reshape(B, H * hd),
+                     p["wo"])[:, None]
+    return out, state
+
+
+# ------------------------------------------------------------------- Mamba
+
+def mamba_schema(d, d_state, expand=2, conv=4, layers=None):
+    di = expand * d
+    pre, ax = lead(layers)
+    return {
+        "in_proj": P(pre + (d, 2 * di), ax + ("embed", "ff")),
+        "conv_w": P(pre + (conv, di), ax + (None, "ff"), scale=0.5),
+        "conv_b": P(pre + (di,), ax + ("ff",), init="zeros"),
+        "x_bc": P(pre + (di, 2 * d_state), ax + ("ff", None)),
+        "x_dt": P(pre + (di,), ax + ("ff",), scale=0.1),
+        "dt_bias": P(pre + (di,), ax + ("ff",), init="zeros"),
+        "a_log": P(pre + (di, d_state), ax + ("ff", None), init="ones"),
+        "dskip": P(pre + (di,), ax + ("ff",), init="ones"),
+        "out_proj": P(pre + (di, d), ax + ("ff", "embed")),
+    }
+
+
+def mamba_init_state(batch, di, d_state, conv=4):
+    return {
+        "ssm": jnp.zeros((batch, di, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, conv - 1, di), jnp.float32),
+    }
+
+
+def _mamba_pre(p, xz, conv_ctx=None):
+    """Split, causal conv, and SSM parameter computation."""
+    di = p["conv_b"].shape[-1]
+    x, z = xz[..., :di], xz[..., di:]
+    conv = p["conv_w"].shape[0]
+    if conv_ctx is None:
+        xp = jnp.pad(x, ((0, 0), (conv - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_ctx.astype(x.dtype), x], axis=1)
+    xc = sum(
+        xp[:, i : i + x.shape[1]] * p["conv_w"][i] for i in range(conv)
+    ) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    ds = p["a_log"].shape[-1]
+    bc = jnp.einsum("bsf,fn->bsn", xc, p["x_bc"])
+    Bm, Cm = bc[..., :ds], bc[..., ds:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsf,f->bs", xc, p["x_dt"])[..., None] + p["dt_bias"]
+    ).astype(jnp.float32)  # (B, S, di)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, ds)
+    return x, z, xc, Bm, Cm, dt, A, xp
+
+
+def mamba_apply(p, x_in, state=None):
+    """x_in: (B, S, D) -> (B, S, D). Associative scan over time."""
+    B, S, D = x_in.shape
+    xz = jnp.einsum("bsd,de->bse", x_in, p["in_proj"])
+    conv_ctx = None if state is None else state["conv"]
+    x, z, xc, Bm, Cm, dt, A, xp = _mamba_pre(p, xz, conv_ctx)
+    # discretise: h_t = exp(dt*A) h_{t-1} + dt * B_t * x_t
+    decay = jnp.exp(dt[..., None] * A)                       # (B, S, di, ds)
+    inp = dt[..., None] * Bm[:, :, None, :] * xc[..., None].astype(jnp.float32)
+    if state is not None:
+        inp = inp.at[:, 0].add(decay[:, 0] * state["ssm"])
+
+    def combine(a, b):
+        da, ia = a
+        db, ib = b
+        return da * db, ib + db * ia
+
+    dec, h = jax.lax.associative_scan(combine, (decay, inp), axis=1)
+    y = jnp.einsum("bsfn,bsn->bsf", h, Cm.astype(jnp.float32))
+    y = y + p["dskip"] * xc.astype(jnp.float32)
+    y = y.astype(x_in.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"])
+    new_state = None
+    if state is not None:
+        conv = p["conv_w"].shape[0]
+        new_state = {"ssm": h[:, -1], "conv": xp[:, -(conv - 1):].astype(jnp.float32)}
+    return out, new_state
+
+
+def mamba_decode(p, x_in, state):
+    out, new_state = mamba_apply(p, x_in, state)
+    return out, new_state

@@ -1,0 +1,99 @@
+"""AdamW with global-norm clipping, cosine schedule and low-precision moments.
+
+Pure-pytree implementation (no optax dependency).  ``moment_dtype=bfloat16``
+halves optimizer-state HBM — the difference between arctic-480b fitting a
+single pod or not (DESIGN.md §5); parameters stay in float32 master copies
+and are cast to the compute dtype inside the loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "opt_init", "opt_update", "abstract_opt", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: str = "float32"
+
+
+def opt_init(params, ocfg: OptConfig):
+    dt = jnp.dtype(ocfg.moment_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(z, params),
+        "v": jax.tree_util.tree_map(z, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt(abstract_params, ocfg: OptConfig):
+    dt = jnp.dtype(ocfg.moment_dtype)
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(z, abstract_params),
+        "v": jax.tree_util.tree_map(z, abstract_params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def lr_at(step, ocfg: OptConfig):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(ocfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - ocfg.warmup_steps)
+        / jnp.maximum(ocfg.total_steps - ocfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return ocfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def opt_update(grads, opt, params, ocfg: OptConfig):
+    """Returns (new_params, new_opt, stats)."""
+    step = opt["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, ocfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(step, ocfg)
+    b1, b2 = ocfg.b1, ocfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(ocfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        mf = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        vf = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        u = (mf / bc1) / (jnp.sqrt(vf / bc2) + ocfg.eps)
+        newp = p.astype(jnp.float32) - lr * (u + ocfg.weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), mf.astype(mdt), vf.astype(mdt)
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    gflat = treedef.flatten_up_to(grads)
+    mflat = treedef.flatten_up_to(opt["m"])
+    vflat = treedef.flatten_up_to(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat, gflat, mflat, vflat)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {
+        "grad_norm": gnorm, "lr": lr,
+    }

@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) for the system's mathematical invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.bspline import bspline_basis, weight_lut
+from repro.core.interpolate import MODES
+from repro.kernels.ref import bsi_ref
+
+COMMON = dict(deadline=None, max_examples=20,
+              suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+@given(u=st.floats(0.0, 1.0, allow_nan=False))
+@settings(**COMMON)
+def test_basis_partition_of_unity_pointwise(u):
+    b = np.asarray(bspline_basis(jnp.float32(u)))
+    assert abs(b.sum() - 1.0) < 1e-6
+    assert (b >= -1e-7).all()
+
+
+@given(
+    tiles=st.tuples(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4)),
+    d=st.integers(2, 6),
+    mode=st.sampled_from(sorted(MODES)),
+    seed=st.integers(0, 2**16),
+)
+@settings(**COMMON)
+def test_all_modes_agree_with_oracle(tiles, d, mode, seed):
+    rng = np.random.default_rng(seed)
+    grid = tuple(t + 3 for t in tiles)
+    phi = jnp.asarray(rng.standard_normal(grid + (2,)), jnp.float32)
+    ref = np.asarray(bsi_ref(phi, (d, d, d)))
+    out = np.asarray(MODES[mode](phi, (d, d, d)))
+    np.testing.assert_allclose(out, ref, atol=5e-5)
+
+
+@given(c=st.floats(-5.0, 5.0, allow_nan=False), d=st.integers(2, 7))
+@settings(**COMMON)
+def test_constant_reproduction(c, d):
+    """Partition of unity => a constant grid interpolates to the constant."""
+    phi = jnp.full((5, 5, 5, 1), c, jnp.float32)
+    out = np.asarray(bsi_ref(phi, (d, d, d)))
+    np.testing.assert_allclose(out, c, atol=1e-4)
+
+
+@given(
+    a=st.floats(-2.0, 2.0, allow_nan=False),
+    b=st.floats(-2.0, 2.0, allow_nan=False),
+    seed=st.integers(0, 2**16),
+)
+@settings(**COMMON)
+def test_linearity(a, b, seed):
+    """BSI is linear in the control grid: T(a*p + b*q) = a*T(p) + b*T(q)."""
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.standard_normal((6, 5, 5, 2)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((6, 5, 5, 2)), jnp.float32)
+    t = (4, 4, 4)
+    lhs = np.asarray(bsi_ref(a * p + b * q, t))
+    rhs = a * np.asarray(bsi_ref(p, t)) + b * np.asarray(bsi_ref(q, t))
+    np.testing.assert_allclose(lhs, rhs, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**COMMON)
+def test_locality(seed):
+    """Perturbing one control point only affects its 4-tile neighbourhood."""
+    rng = np.random.default_rng(seed)
+    phi = jnp.asarray(rng.standard_normal((8, 8, 8, 1)), jnp.float32)
+    d = 4
+    base = np.asarray(bsi_ref(phi, (d, d, d)))
+    # bump stored point (4, 4, 4) -> affects tiles 1..4 per axis only
+    phi2 = phi.at[4, 4, 4, 0].add(10.0)
+    bumped = np.asarray(bsi_ref(phi2, (d, d, d)))
+    diff = np.abs(bumped - base)[..., 0]
+    affected = diff > 1e-5
+    xs, ys, zs = np.where(affected)
+    # stored index 4 = paper control index 3: support = tiles t with
+    # t <= 4 <= t+3  =>  tiles 1..4  => voxels [d, 5d)
+    for coords in (xs, ys, zs):
+        assert coords.min() >= d
+        assert coords.max() < 5 * d
+
+
+@given(seed=st.integers(0, 2**16), d=st.integers(2, 5))
+@settings(**COMMON)
+def test_translation_equivariance(seed, d):
+    """Shifting the control grid by one point shifts the field by one tile."""
+    rng = np.random.default_rng(seed)
+    phi = jnp.asarray(rng.standard_normal((8, 6, 6, 1)), jnp.float32)
+    t = (d, d, d)
+    full = np.asarray(bsi_ref(phi, t))
+    shifted = np.asarray(bsi_ref(phi[1:], t))
+    np.testing.assert_allclose(full[d:], shifted[: full.shape[0] - d], atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=10)
+def test_quantize_int8_bounded_error(seed):
+    from repro.optim.compression import dequantize_int8, quantize_int8
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((32,)) * rng.uniform(0.01, 100),
+                    jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+@given(
+    batch=st.integers(1, 4), heads=st.integers(1, 4),
+    seq=st.integers(4, 24), seed=st.integers(0, 2**16),
+)
+@settings(deadline=None, max_examples=10)
+def test_blockwise_attention_matches_full(batch, heads, seq, seed):
+    from repro.models.attention import attend_blockwise, attend_full
+
+    rng = np.random.default_rng(seed)
+    hd = 8
+    q = jnp.asarray(rng.standard_normal((batch, seq, heads, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((batch, seq, heads, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((batch, seq, heads, hd)), jnp.float32)
+    pos = jnp.arange(seq)
+    full = np.asarray(attend_full(q, k, v, q_positions=pos, k_positions=pos))
+    # chunk sizes that divide seq exercise the scan path
+    for c in {1, 2, 4}:
+        if seq % c:
+            continue
+        blk = np.asarray(attend_blockwise(
+            q, k, v, q_positions=pos, k_positions=pos, q_chunk=c, kv_chunk=c))
+        np.testing.assert_allclose(blk, full, atol=2e-5)
