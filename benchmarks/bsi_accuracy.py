@@ -26,13 +26,13 @@ def _f64_reference(phi64, tile):
     return bsi_ref(phi64, tile)
 
 
-def run(grid_pts=9, channels=3):
+def run(grid_pts=9, channels=3, tiles=None):
     import jax.numpy as jnp
 
     rows = []
     rng = np.random.default_rng(0)
     with jax.experimental.enable_x64():
-        for t in TILES:
+        for t in (tiles or TILES):
             tile = (t, t, t)
             phi_np = rng.standard_normal((grid_pts,) * 3 + (channels,))
             ref = np.asarray(_f64_reference(jnp.asarray(phi_np, jnp.float64), tile))
@@ -51,8 +51,8 @@ def run(grid_pts=9, channels=3):
     return rows
 
 
-def main():
-    return emit(run(), ["name", "us_per_call", "derived"])
+def main(**kwargs):
+    return emit(run(**kwargs), ["name", "us_per_call", "derived"])
 
 
 if __name__ == "__main__":

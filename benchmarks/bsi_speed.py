@@ -22,10 +22,11 @@ TILES = [3, 4, 5, 6, 7]
 MODES = ["gather", "tt", "ttli", "separable"]
 
 
-def run(full=False, volumes=("phantom2", "porcine1"), reps=3):
-    vols = FULL_VOLUMES if full else SCALED_VOLUMES
+def run(full=False, volumes=("phantom2", "porcine1"), reps=3, tiles=None,
+        vol_table=None):
+    vols = vol_table or (FULL_VOLUMES if full else SCALED_VOLUMES)
     rows = []
-    for t in TILES:
+    for t in (tiles or TILES):
         tile = (t, t, t)
         base_ns = None
         for mode in MODES:
@@ -48,8 +49,8 @@ def run(full=False, volumes=("phantom2", "porcine1"), reps=3):
     return rows
 
 
-def main(full=False):
-    return emit(run(full), ["name", "us_per_call", "derived"])
+def main(full=False, **kwargs):
+    return emit(run(full, **kwargs), ["name", "us_per_call", "derived"])
 
 
 if __name__ == "__main__":

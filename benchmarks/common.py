@@ -23,6 +23,11 @@ FULL_VOLUMES = {
     "porcine1": (303, 167, 212),
     "porcine2": (267, 169, 237),
 }
+# CI smoke preset: just big enough that every code path executes.
+TINY_VOLUMES = {
+    "phantom2": (30, 26, 21),
+    "porcine1": (31, 24, 27),
+}
 
 
 def time_fn(fn, *args, reps=5, warmup=2):

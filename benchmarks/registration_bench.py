@@ -2,36 +2,50 @@
 
 Registers synthetic phantom pairs (repro.data.volumes) with (a) affine only,
 (b) FFD using the baseline ``gather`` BSI, (c) FFD using the optimized
-``separable`` BSI — reporting total time, the BSI share (Amdahl argument of
-paper §6.2) and MAE/SSIM against the fixed volume (Table 5 analogue).
+``separable`` BSI, and (d) FFD using the autotuned BSI (``repro.engine``
+picks the fastest form for this grid/tile) — reporting total time, the BSI
+share (Amdahl argument of paper §6.2) and MAE/SSIM against the fixed volume
+(Table 5 analogue).  The FFD inner loop is the engine's scan-compiled path.
 
 CSV: name,us_per_call,derived.
 """
 from __future__ import annotations
 
 from benchmarks.common import emit
+from repro.core import ffd as ffd_mod
 from repro.core import metrics
 from repro.core.registration import affine_register, ffd_register
 from repro.data.volumes import make_pair
+from repro.engine.autotune import resolve_bsi
 
 PAIRS = [("phantom_a", 0), ("phantom_b", 1)]
 
+TILE = (6, 6, 6)
 
-def run(shape=(48, 40, 36), iters=25):
+
+def run(shape=(48, 40, 36), iters=25, affine_iters=30):
+    auto_mode, auto_impl = resolve_bsi(
+        "auto", "auto", ffd_mod.grid_shape_for_volume(shape, TILE), TILE,
+        measure_grad=True)
     rows = []
     for name, seed in PAIRS:
-        fixed, moving, _ = make_pair(shape=shape, tile=(6, 6, 6),
+        fixed, moving, _ = make_pair(shape=shape, tile=TILE,
                                      magnitude=2.0, seed=seed)
         pre = (float(metrics.mae(moving, fixed)),
                float(metrics.ssim(moving, fixed)))
-        aff = affine_register(fixed, moving, iters=30)
+        aff = affine_register(fixed, moving, iters=affine_iters)
         res = {}
-        for mode in ("gather", "separable"):
-            res[mode] = ffd_register(
-                fixed, moving, tile=(6, 6, 6), levels=2, iters=iters,
-                mode=mode, measure_bsi_time=True,
+        for mode, impl in (("gather", "jnp"), ("separable", "jnp"),
+                           (auto_mode, auto_impl)):
+            if (mode, impl) in res:
+                continue
+            res[(mode, impl)] = ffd_register(
+                fixed, moving, tile=TILE, levels=2, iters=iters,
+                mode=mode, impl=impl, measure_bsi_time=True,
             )
-        base, opt = res["gather"], res["separable"]
+        base = res[("gather", "jnp")]
+        opt = res[("separable", "jnp")]
+        auto = res[(auto_mode, auto_impl)]
         rows += [
             (f"registration/{name}/affine",
              round(aff.seconds * 1e6, 0),
@@ -48,14 +62,20 @@ def run(shape=(48, 40, 36), iters=25):
              f"|ssim={float(metrics.ssim(opt.warped, fixed)):.4f}"
              f"|bsi_s={opt.bsi_seconds:.3f}"
              f"|reg_speedup=x{base.seconds / max(opt.seconds, 1e-9):.2f}"),
+            (f"registration/{name}/ffd_auto",
+             round(auto.seconds * 1e6, 0),
+             f"mae={float(metrics.mae(auto.warped, fixed)):.4f}"
+             f"|ssim={float(metrics.ssim(auto.warped, fixed)):.4f}"
+             f"|chosen={auto_mode}/{auto_impl}"
+             f"|reg_speedup=x{base.seconds / max(auto.seconds, 1e-9):.2f}"),
             (f"registration/{name}/pre_registration", 0.0,
              f"mae={pre[0]:.4f}|ssim={pre[1]:.4f}"),
         ]
     return rows
 
 
-def main():
-    return emit(run(), ["name", "us_per_call", "derived"])
+def main(**kwargs):
+    return emit(run(**kwargs), ["name", "us_per_call", "derived"])
 
 
 if __name__ == "__main__":

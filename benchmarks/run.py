@@ -6,32 +6,86 @@ Prints ``name,us_per_call,derived`` CSV rows for:
   * registration_bench — paper Figs. 8-9 + Table 5 (FFD time + MAE/SSIM)
   * transfer_model     — paper Appendix A (Eqs. A.1-A.4 transfer counts)
 
+Presets:
+  * default — scaled-down volumes (CPU wall-time budget)
+  * full    — the exact paper resolutions (``--full`` is an alias)
+  * ci      — tiny smoke sizes; paired with ``--json BENCH_ci.json`` this is
+              the CI perf-trajectory artifact
+
 Roofline tables (assignment §Roofline) are produced separately from the
 dry-run artifacts by ``python -m repro.launch.roofline_report``.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+if str(_ROOT) not in sys.path:  # `python benchmarks/run.py` puts benchmarks/
+    sys.path.insert(0, str(_ROOT))  # first, not the repo root
+try:
+    import repro  # noqa: F401  (installed via `pip install -e .`)
+except ModuleNotFoundError:  # src-layout checkout without install
+    sys.path.insert(0, str(_ROOT / "src"))
 
 
-def main() -> None:
-    from benchmarks import bsi_accuracy, bsi_speed, registration_bench, transfer_model
+def _suites(preset):
+    from benchmarks import (bsi_accuracy, bsi_speed, registration_bench,
+                            transfer_model)
+    from benchmarks.common import TINY_VOLUMES
 
-    suites = [
+    if preset == "ci":
+        return [
+            ("transfer_model", transfer_model.main),
+            ("bsi_accuracy", lambda: bsi_accuracy.main(grid_pts=6,
+                                                       tiles=[3, 5])),
+            ("bsi_speed", lambda: bsi_speed.main(
+                tiles=[3, 5], reps=2, vol_table=TINY_VOLUMES,
+                volumes=tuple(TINY_VOLUMES))),
+            ("registration_bench", lambda: registration_bench.main(
+                shape=(22, 20, 18), iters=4, affine_iters=10)),
+        ]
+    full = preset == "full"
+    return [
         ("transfer_model", transfer_model.main),
         ("bsi_accuracy", bsi_accuracy.main),
-        ("bsi_speed", lambda: bsi_speed.main(full="--full" in sys.argv)),
+        ("bsi_speed", lambda: bsi_speed.main(full=full)),
         ("registration_bench", registration_bench.main),
     ]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--preset", choices=["default", "full", "ci"],
+                    default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="alias for --preset full")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write all rows to PATH as JSON")
+    args = ap.parse_args(argv)
+    preset = args.preset or ("full" if args.full else "default")
+
+    results = {}
     failures = []
-    for name, fn in suites:
+    for name, fn in _suites(preset):
         print(f"# --- {name} ---")
         try:
-            fn()
+            rows = fn()
+            results[name] = [
+                {"name": n, "us_per_call": u, "derived": d}
+                for n, u, d in rows
+            ]
         except Exception:
             failures.append(name)
             traceback.print_exc()
+
+    if args.json:
+        payload = {"preset": preset, "failures": failures, "suites": results}
+        Path(args.json).write_text(json.dumps(payload, indent=1))
+        print(f"# wrote {args.json}")
     if failures:
         raise SystemExit(f"benchmark suites failed: {failures}")
 

@@ -1,0 +1,19 @@
+"""Make the src-layout package importable without installation.
+
+`pip install -e .` is the supported path (and what CI does); this keeps the
+bare `python -m pytest` / `PYTHONPATH=src` invocations working on a raw
+checkout.
+"""
+import os
+import sys
+import tempfile
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+# Keep test runs from measuring-and-writing the user-global autotune cache
+# (~/.cache/repro): tests exercise ffd_register's mode="auto" default.
+if "REPRO_AUTOTUNE_CACHE" not in os.environ:
+    os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
+        tempfile.mkdtemp(prefix="repro-autotune-test-"), "bsi_autotune.json")

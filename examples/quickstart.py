@@ -5,9 +5,20 @@ dense deformation field — plus the generic-interpolation use from paper §8
 (2-D image zoom via a 3-D grid with a flat z axis), validated against the
 float-oracle and timed.
 
-    PYTHONPATH=src python examples/quickstart.py
+    python examples/quickstart.py [--tiny]
+
+``--tiny`` shrinks the volumes to CI-smoke size (compile + run every form
+in seconds) — the CI gate runs exactly that.
 """
+import argparse
+import sys
 import time
+from pathlib import Path
+
+try:
+    import repro  # noqa: F401
+except ModuleNotFoundError:  # src-layout checkout without install
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 import jax.numpy as jnp
@@ -20,11 +31,15 @@ from repro.kernels.ref import bsi_ref
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-smoke sizes (seconds, not minutes, on CPU)")
+    args = ap.parse_args()
     rng = np.random.default_rng(0)
 
     # --- 1. dense deformation field from a control grid (the FFD inner loop)
     tile = (5, 5, 5)                       # NiftyReg's default spacing
-    vol = (80, 75, 70)
+    vol = (30, 25, 20) if args.tiny else (80, 75, 70)
     gshape = ffd.grid_shape_for_volume(vol, tile)
     phi = jnp.asarray(rng.standard_normal(gshape + (3,)), jnp.float32)
 

@@ -2,28 +2,49 @@
 
 Creates a (fixed, moving) pair with a known smooth deformation (the
 synthetic pneumoperitoneum), registers with affine then FFD (BSI inner
-loop in the mode of your choice), and reports MAE/SSIM (paper Table 5)
-plus the BSI share of runtime (paper Fig. 8-9 Amdahl argument).
+loop in the mode of your choice — default ``auto``, the engine autotuner's
+winner for this grid/tile), and reports MAE/SSIM (paper Table 5) plus the
+BSI share of runtime (paper Fig. 8-9 Amdahl argument).  ``--batch N``
+registers N pairs in one jitted program via ``repro.engine.register_batch``.
 
-    PYTHONPATH=src python examples/register_volumes.py [--mode separable]
+    python examples/register_volumes.py [--mode auto] [--batch 4]
 """
 import argparse
+import sys
 import time
+from pathlib import Path
 
-from repro.core import metrics
+try:
+    import repro  # noqa: F401
+except ModuleNotFoundError:  # src-layout checkout without install
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import ffd, metrics
 from repro.core.registration import affine_register, ffd_register
 from repro.data.volumes import make_pair
+from repro.engine import register_batch, resolve_bsi
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="separable",
-                    choices=["gather", "tt", "ttli", "separable"])
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "gather", "tt", "ttli", "separable"])
     ap.add_argument("--shape", type=int, nargs=3, default=(64, 56, 48))
     ap.add_argument("--iters", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=0,
+                    help="also register a batch of this many pairs in one "
+                         "jitted program (repro.engine.register_batch)")
     args = ap.parse_args()
 
-    fixed, moving, _ = make_pair(shape=tuple(args.shape), tile=(6, 6, 6),
+    tile = (6, 6, 6)
+    shape = tuple(args.shape)
+    mode, impl = resolve_bsi(args.mode, "auto",
+                             ffd.grid_shape_for_volume(shape, tile), tile,
+                             measure_grad=True)
+    print(f"BSI form: {mode}/{impl}"
+          + (" (autotuned)" if args.mode == "auto" else ""))
+
+    fixed, moving, _ = make_pair(shape=shape, tile=tile,
                                  magnitude=2.2, seed=0)
     print(f"pair {fixed.shape}; pre-registration: "
           f"mae={float(metrics.mae(moving, fixed)):.4f} "
@@ -34,13 +55,31 @@ def main():
           f"mae={float(metrics.mae(aff.warped, fixed)):.4f} "
           f"ssim={float(metrics.ssim(aff.warped, fixed)):.4f}")
 
-    res = ffd_register(fixed, moving, tile=(6, 6, 6), levels=2,
-                       iters=args.iters, mode=args.mode,
+    res = ffd_register(fixed, moving, tile=tile, levels=2,
+                       iters=args.iters, mode=mode, impl=impl,
                        measure_bsi_time=True)
-    print(f"ffd/{args.mode:9s} ({res.seconds:5.1f}s, "
+    print(f"ffd/{mode:9s} ({res.seconds:5.1f}s, "
           f"~{res.bsi_seconds:.1f}s in BSI): "
           f"mae={float(metrics.mae(res.warped, fixed)):.4f} "
           f"ssim={float(metrics.ssim(res.warped, fixed)):.4f}")
+
+    if args.batch:
+        import jax.numpy as jnp
+
+        pairs = [make_pair(shape=shape, tile=tile, magnitude=2.2, seed=s)
+                 for s in range(args.batch)]
+        F = jnp.stack([p[0] for p in pairs])
+        M = jnp.stack([p[1] for p in pairs])
+        batch = register_batch(F, M, tile=tile, levels=2, iters=args.iters,
+                               mode=mode, impl=impl)
+        cold = batch.seconds  # includes the one-time compile
+        t0 = time.perf_counter()
+        batch = register_batch(F, M, tile=tile, levels=2, iters=args.iters,
+                               mode=mode, impl=impl)
+        warm = time.perf_counter() - t0
+        mae = float(metrics.mae(batch.warped[0], fixed))
+        print(f"batch x{args.batch} (cold {cold:5.1f}s, warm {warm:5.2f}s"
+              f" = {warm / args.batch:5.2f}s/pair): mae[0]={mae:.4f}")
 
 
 if __name__ == "__main__":

@@ -17,12 +17,35 @@ __all__ = [
     "trilinear_sample",
     "warp_volume",
     "bending_energy",
+    "downsample2",
+    "upsample_grid",
 ]
 
 
 def grid_shape_for_volume(vol_shape, tile) -> tuple:
     """Stored control-grid dims covering ``vol_shape`` at spacing ``tile``."""
     return tuple(-(-int(s) // int(d)) + 3 for s, d in zip(vol_shape, tile))
+
+
+def downsample2(vol):
+    """2x average-pool downsampling (pyramid level)."""
+    X, Y, Z = (s - s % 2 for s in vol.shape)
+    v = vol[:X, :Y, :Z].reshape(X // 2, 2, Y // 2, 2, Z // 2, 2)
+    return v.mean(axis=(1, 3, 5))
+
+
+def upsample_grid(phi, new_shape):
+    """Upsample a control grid to a finer level's grid shape (trilinear)."""
+    old = phi.shape[:3]
+    coords = jnp.stack(
+        jnp.meshgrid(
+            *[jnp.linspace(0.0, o - 1.0, n) for o, n in zip(old, new_shape)],
+            indexing="ij",
+        ),
+        axis=-1,
+    )
+    comps = [trilinear_sample(phi[..., c], coords) for c in range(phi.shape[-1])]
+    return jnp.stack(comps, axis=-1) * 2.0  # displacements double at 2x res
 
 
 def dense_field(phi, tile, vol_shape, *, mode="separable", impl="jnp"):

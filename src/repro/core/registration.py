@@ -5,7 +5,14 @@ multi-resolution pyramid, SSD similarity, bending-energy regularisation,
 gradient-based optimisation of the control grid.  The expensive inner step —
 expanding the control grid to the dense deformation field — is exactly the
 paper's BSI and is dispatched through ``repro.core.interpolate`` so any of
-the algorithm forms / kernels can be plugged in (``mode=``, ``impl=``).
+the algorithm forms / kernels can be plugged in (``mode=``, ``impl=``;
+both default to ``"auto"``, the ``repro.engine.autotune`` winner).
+
+The inner optimisation is device-resident: each pyramid level runs as ONE
+``jax.lax.scan``-compiled program (``repro.engine.loop``), with runners
+cached per configuration so repeated calls pay zero re-jits, and the
+``(phi, m, v)`` buffers donated on accelerator backends.  For many pairs at
+once, use ``repro.engine.register_batch`` — the same pipeline under ``vmap``.
 
 Hand-derived gradients (NiftyReg's approach) are replaced by autodiff; the
 BSI forward is still the dominant cost, so the paper's speedup story carries.
@@ -21,6 +28,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ffd, metrics
+from repro.core.ffd import downsample2  # re-exported (seed API)
+from repro.engine.autotune import resolve_bsi
+from repro.engine.batch import ffd_level_loss
+from repro.engine.loop import make_adam_runner
 
 __all__ = ["RegistrationResult", "affine_register", "ffd_register", "downsample2"]
 
@@ -34,27 +45,9 @@ class RegistrationResult:
     bsi_seconds: float = 0.0 # time inside BSI (paper Figs. 8-9 breakdown)
 
 
-def downsample2(vol):
-    """2x average-pool downsampling (pyramid level)."""
-    X, Y, Z = (s - s % 2 for s in vol.shape)
-    v = vol[:X, :Y, :Z].reshape(X // 2, 2, Y // 2, 2, Z // 2, 2)
-    return v.mean(axis=(1, 3, 5))
-
-
-def _adam_update(g, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
-    m = b1 * m + (1 - b1) * g
-    v = b2 * v + (1 - b2) * g * g
-    mh = m / (1 - b1**step)
-    vh = v / (1 - b2**step)
-    return lr * mh / (jnp.sqrt(vh) + eps), m, v
-
-
-def affine_register(fixed, moving, *, iters=60, lr=0.02):
-    """Optimise a 3x4 affine (around the volume centre) minimising SSD."""
-    fixed = jnp.asarray(fixed, jnp.float32)
-    moving = jnp.asarray(moving, jnp.float32)
-    centre = (jnp.asarray(fixed.shape, jnp.float32) - 1.0) / 2.0
-    X, Y, Z = fixed.shape
+def _affine_ident_centre(vol_shape):
+    centre = (jnp.asarray(vol_shape, jnp.float32) - 1.0) / 2.0
+    X, Y, Z = vol_shape
     ident = jnp.stack(
         jnp.meshgrid(
             jnp.arange(X, dtype=jnp.float32),
@@ -64,33 +57,58 @@ def affine_register(fixed, moving, *, iters=60, lr=0.02):
         ),
         axis=-1,
     )
+    return ident, centre
 
-    def loss_fn(theta):
-        A = theta[:, :3] + jnp.eye(3)
-        t = theta[:, 3]
-        coords = (ident - centre) @ A.T + centre + t
-        warped = ffd.trilinear_sample(moving, coords)
-        return metrics.ssd(warped, fixed)
 
-    @jax.jit
-    def step_fn(theta, m, v, i):
-        g = jax.grad(loss_fn)(theta)
-        upd, m, v = _adam_update(g, m, v, i, lr)
-        return theta - upd, m, v
-
-    theta = jnp.zeros((3, 4), jnp.float32)
-    m = jnp.zeros_like(theta)
-    v = jnp.zeros_like(theta)
-    losses = []
-    t0 = time.perf_counter()
-    for i in range(1, iters + 1):
-        theta, m, v = step_fn(theta, m, v, i)
-        if i % 10 == 0 or i == iters:
-            losses.append(float(loss_fn(theta)))
+def _affine_warp(theta, moving, vol_shape):
+    ident, centre = _affine_ident_centre(vol_shape)
     A = theta[:, :3] + jnp.eye(3)
     coords = (ident - centre) @ A.T + centre + theta[:, 3]
-    warped = ffd.trilinear_sample(moving, coords)
+    return ffd.trilinear_sample(moving, coords)
+
+
+@functools.lru_cache(maxsize=32)
+def _affine_runner(vol_shape, iters, lr):
+    def loss_builder(f, mov):
+        def loss_fn(theta):
+            return metrics.ssd(_affine_warp(theta, mov, vol_shape), f)
+
+        return loss_fn
+
+    return make_adam_runner(loss_builder, iters=iters, lr=lr)
+
+
+def affine_register(fixed, moving, *, iters=60, lr=0.02):
+    """Optimise a 3x4 affine (around the volume centre) minimising SSD.
+
+    The whole optimisation is one scan-compiled program; the runner is
+    cached by (shape, iters, lr), so repeat calls skip compilation.
+    """
+    fixed = jnp.asarray(fixed, jnp.float32)
+    moving = jnp.asarray(moving, jnp.float32)
+    t0 = time.perf_counter()
+    runner = _affine_runner(fixed.shape, int(iters), float(lr))
+    theta0 = jnp.zeros((3, 4), jnp.float32)
+    theta, trace = runner(theta0, jnp.zeros_like(theta0),
+                          jnp.zeros_like(theta0), fixed, moving)
+    # same sampling points as the seed's Python loop: every 10th + last
+    marks = sorted(set(range(10, iters + 1, 10)) | {iters})
+    losses = [float(trace[i - 1]) for i in marks]
+    warped = _affine_warp(theta, moving, fixed.shape)
+    jax.block_until_ready(warped)
     return RegistrationResult(warped, theta, losses, time.perf_counter() - t0)
+
+
+@functools.lru_cache(maxsize=64)  # bounded: ~levels x configs in flight
+def _ffd_level_runner(vol_shape, tile, iters, lr, bending_weight, mode, impl):
+    del vol_shape  # cache key only; shapes re-trace via jit
+
+    def loss_builder(f, mov):
+        return ffd_level_loss(f, mov, tile=tile,
+                              bending_weight=bending_weight,
+                              mode=mode, impl=impl)
+
+    return make_adam_runner(loss_builder, iters=iters, lr=lr)
 
 
 def ffd_register(
@@ -102,18 +120,24 @@ def ffd_register(
     iters=40,
     lr=0.5,
     bending_weight=5e-3,
-    mode="separable",
-    impl="jnp",
+    mode="auto",
+    impl="auto",
     measure_bsi_time=False,
 ):
     """Multi-resolution FFD registration (NiftyReg workflow, paper §6).
 
     Pyramid: coarse-to-fine on 2x-downsampled volumes; the control grid is
-    upsampled (re-expanded through BSI itself) between levels.
+    upsampled (re-expanded through BSI itself) between levels.  Each level's
+    Adam loop is a single ``lax.scan`` program — one compile per pyramid
+    level, cached across calls.  ``mode``/``impl`` default to ``"auto"``:
+    the autotuned fastest BSI form for the finest-level grid.
     """
     fixed = jnp.asarray(fixed, jnp.float32)
     moving = jnp.asarray(moving, jnp.float32)
     tile = tuple(int(t) for t in tile)
+    mode, impl = resolve_bsi(
+        mode, impl, ffd.grid_shape_for_volume(fixed.shape, tile), tile,
+        measure_grad=True)  # the loop's workload is forward+backward BSI
 
     pyramid = [(fixed, moving)]
     for _ in range(levels - 1):
@@ -132,25 +156,14 @@ def ffd_register(
         if phi is None:
             phi = jnp.zeros(gshape + (3,), jnp.float32)
         else:
-            phi = _upsample_grid(phi, gshape)
+            phi = ffd.upsample_grid(phi, gshape)
 
-        def loss_fn(p, f=f, m=m):
-            disp = bsi_fn(p, tile, f.shape)
-            warped = ffd.warp_volume(m, disp)
-            return metrics.ssd(warped, f) + bending_weight * ffd.bending_energy(p)
-
-        @jax.jit
-        def step_fn(p, mm, vv, i, f=f, m=m):
-            g = jax.grad(loss_fn)(p)
-            upd, mm, vv = _adam_update(g, mm, vv, i, lr)
-            return p - upd, mm, vv
-
-        mm = jnp.zeros_like(phi)
-        vv = jnp.zeros_like(phi)
-        for i in range(1, iters + 1):
-            phi, mm, vv = step_fn(phi, mm, vv, i)
+        runner = _ffd_level_runner(f.shape, tile, int(iters), float(lr),
+                                   float(bending_weight), mode, impl)
+        phi, trace = runner(phi, jnp.zeros_like(phi), jnp.zeros_like(phi),
+                            f, m)
         phi.block_until_ready()
-        losses.append(float(loss_fn(phi)))
+        losses.append(float(trace[-1]))
 
         if measure_bsi_time and level == len(pyramid) - 1:
             # Isolate the BSI fraction the paper optimises (Figs. 8-9).
@@ -168,21 +181,3 @@ def ffd_register(
     return RegistrationResult(
         warped, phi, losses, time.perf_counter() - t0, bsi_seconds
     )
-
-
-def _upsample_grid(phi, new_shape):
-    """Upsample a control grid to a finer level's grid shape (trilinear)."""
-    old = phi.shape[:3]
-    coords = jnp.stack(
-        jnp.meshgrid(
-            *[jnp.linspace(0.0, o - 1.0, n) for o, n in zip(old, new_shape)],
-            indexing="ij",
-        ),
-        axis=-1,
-    )
-    flat = ffd.trilinear_sample(
-        phi[..., 0], coords
-    )  # sample each component separately
-    comps = [ffd.trilinear_sample(phi[..., c], coords) for c in range(phi.shape[-1])]
-    del flat
-    return jnp.stack(comps, axis=-1) * 2.0  # displacements double at 2x res

@@ -1,0 +1,25 @@
+"""Batched, device-resident registration engine.
+
+The workload-scale layer over ``repro.core``: scan-compiled optimisation
+loops (``engine.loop``), whole-pipeline batching via ``vmap`` so N volume
+pairs register in one jitted program (``engine.batch.register_batch``), and
+a benchmark-and-cache autotuner that picks the fastest BSI form per
+configuration instead of hardcoded defaults (``engine.autotune``).
+"""
+from repro.engine.autotune import (BsiChoice, autotune_bsi,
+                                   default_candidates, resolve_bsi)
+from repro.engine.batch import (BatchRegistrationResult, ffd_pipeline,
+                                register_batch)
+from repro.engine.loop import adam_scan, make_adam_runner
+
+__all__ = [
+    "BsiChoice",
+    "autotune_bsi",
+    "default_candidates",
+    "resolve_bsi",
+    "BatchRegistrationResult",
+    "ffd_pipeline",
+    "register_batch",
+    "adam_scan",
+    "make_adam_runner",
+]

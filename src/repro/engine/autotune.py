@@ -1,0 +1,200 @@
+"""Autotuner: pick the fastest BSI (mode, impl) for a (grid_shape, tile).
+
+The paper's comparison matrix (§5) has no single winner: which algorithm
+form is fastest depends on tile size, grid size and the backend (the
+separable tensor-contraction form wins where matmul units dominate; the
+lerp form wins where FMA-bound).  Instead of hardcoding ``mode=`` / ``impl=``
+defaults in every caller, the engine benchmarks the available forms for the
+configuration actually being registered and caches the winner:
+
+* in-process memory cache, keyed by ``backend|grid|tile|channels``;
+* an optional JSON disk cache (``$REPRO_AUTOTUNE_CACHE`` or
+  ``~/.cache/repro/bsi_autotune.json``) so repeated process launches —
+  benchmark runs, serving replicas — skip the measurement entirely.
+
+Callers go through :func:`resolve_bsi`, which passes explicit choices
+through untouched and only tunes the ``"auto"`` axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interpolate import MODES, interpolate
+from repro.kernels.ops import PALLAS_MODES
+
+__all__ = ["BsiChoice", "autotune_bsi", "resolve_bsi", "default_candidates",
+           "default_cache_path"]
+
+JNP_CANDIDATES = tuple((m, "jnp") for m in sorted(MODES))
+PALLAS_CANDIDATES = tuple((m, "pallas") for m in PALLAS_MODES)
+
+
+@dataclasses.dataclass(frozen=True)
+class BsiChoice:
+    mode: str
+    impl: str
+    us_per_call: float
+
+
+_MEM_CACHE: dict = {}
+
+
+def default_cache_path() -> str:
+    return os.environ.get("REPRO_AUTOTUNE_CACHE") or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "bsi_autotune.json")
+
+
+def default_candidates():
+    """Forms worth benchmarking on the current backend.
+
+    On CPU the Pallas kernels only run under ``interpret=True`` — a
+    correctness path, orders of magnitude slower than the jnp forms — so
+    they are excluded unless ``REPRO_AUTOTUNE_PALLAS=1`` forces them in.
+    """
+    cands = list(JNP_CANDIDATES)
+    if jax.default_backend() != "cpu" or os.environ.get("REPRO_AUTOTUNE_PALLAS"):
+        cands += list(PALLAS_CANDIDATES)
+    return tuple(cands)
+
+
+def _key(grid_shape, tile, channels) -> str:
+    g = "x".join(map(str, grid_shape))
+    t = "x".join(map(str, tile))
+    return f"{jax.default_backend()}|g{g}|t{t}|c{channels}"
+
+
+def _load_disk(path) -> dict:
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return {}
+
+
+def _store_disk(path, key, choice) -> None:
+    entries = _load_disk(path)
+    entries[key] = dataclasses.asdict(choice)
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as fh:
+            json.dump(entries, fh, indent=1, sort_keys=True)
+        os.replace(tmp, path)  # atomic: concurrent tuners never corrupt it
+    except OSError:
+        pass  # cache is best-effort; tuning still returned in-process
+
+
+def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
+                 cache_path=None, use_cache=True,
+                 measure_grad=False) -> BsiChoice:
+    """Benchmark the candidate BSI forms and return (and cache) the winner.
+
+    Args:
+      grid_shape: stored control-grid dims ``(Tx+3, Ty+3, Tz+3)``.
+      tile: control-point spacing ``(dx, dy, dz)``.
+      channels: trailing channel count of the grid (3 for displacement).
+      candidates: optional ``((mode, impl), ...)`` override.
+      reps: timed repetitions per candidate (after a compile+warmup call).
+      cache_path: JSON cache location (``None`` -> :func:`default_cache_path`).
+      use_cache: bypass both caches when False (always re-measure).
+      measure_grad: time forward+backward (the registration loop's workload)
+        instead of the forward alone.  Candidates without a VJP (the Pallas
+        kernels) are excluded automatically.
+    """
+    grid_shape = tuple(int(g) for g in grid_shape)
+    tile = tuple(int(t) for t in tile)
+    channels = int(channels)
+    cands = (default_candidates() if candidates is None
+             else tuple(candidates))
+    # the key names everything that can change the measurement
+    key = (_key(grid_shape, tile, channels)
+           + ("|grad" if measure_grad else "")
+           + "|" + ",".join(f"{m}/{i}" for m, i in cands))
+    cache_path = default_cache_path() if cache_path is None else cache_path
+    mem_key = (cache_path, key)
+
+    if use_cache and mem_key in _MEM_CACHE:
+        return _MEM_CACHE[mem_key]
+    if use_cache:
+        hit = _load_disk(cache_path).get(key)
+        if hit:
+            choice = BsiChoice(hit["mode"], hit["impl"],
+                               float(hit["us_per_call"]))
+            _MEM_CACHE[mem_key] = choice
+            return choice
+
+    rng = np.random.default_rng(0)
+    phi = jnp.asarray(rng.standard_normal(grid_shape + (channels,)),
+                      jnp.float32)
+    best = None
+    for mode, impl in cands:
+        def fwd(p, mode=mode, impl=impl):
+            return interpolate(p, tile, mode=mode, impl=impl)
+
+        if measure_grad:
+            fn = jax.jit(jax.grad(lambda p: fwd(p).sum()))
+        else:
+            fn = jax.jit(fwd)  # consumers always run the form under jit
+        try:
+            jax.block_until_ready(fn(phi))  # compile + warmup
+        except Exception:
+            continue  # candidate unavailable on this backend/workload
+        times = []
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(phi))
+            times.append(time.perf_counter() - t0)
+        us = float(np.median(times) * 1e6)
+        if best is None or us < best.us_per_call:
+            best = BsiChoice(mode, impl, us)
+    if best is None:
+        raise RuntimeError(
+            f"no BSI candidate succeeded for grid={grid_shape} tile={tile} "
+            f"candidates={cands}")
+
+    if use_cache:
+        _MEM_CACHE[mem_key] = best
+        _store_disk(cache_path, key, best)
+    return best
+
+
+def _candidate_pool(mode, impl):
+    """Candidates honouring explicitly fixed axes.
+
+    An explicit ``impl`` overrides the backend-based default exclusion (a
+    user asking for ``pallas`` on CPU gets interpret-mode Pallas, as the
+    seed's explicit ``impl=`` did); only fully-``auto`` axes are subject to
+    :func:`default_candidates`.
+    """
+    if impl == "jnp":
+        pool = JNP_CANDIDATES
+    elif impl == "pallas":
+        pool = PALLAS_CANDIDATES
+    else:
+        pool = default_candidates()
+    return tuple(c for c in pool if mode in ("auto", c[0]))
+
+
+def resolve_bsi(mode, impl, grid_shape, tile, channels=3, **tune_kwargs):
+    """Resolve possibly-``"auto"`` (mode, impl) to concrete values.
+
+    Explicit choices pass through untouched; an ``"auto"`` on either axis
+    narrows the candidate set to the fixed axis and autotunes the rest.
+    """
+    if mode != "auto" and impl != "auto":
+        return mode, impl
+    cands = _candidate_pool(mode, impl)
+    if not cands:
+        raise ValueError(f"no BSI candidates match mode={mode!r} impl={impl!r}")
+    if len(cands) == 1:
+        return cands[0]
+    choice = autotune_bsi(grid_shape, tile, channels,
+                          candidates=cands, **tune_kwargs)
+    return choice.mode, choice.impl

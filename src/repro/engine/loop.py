@@ -1,0 +1,76 @@
+"""Device-resident optimisation loops: ``jax.lax.scan`` over Adam steps.
+
+The seed drove every optimiser from a Python ``for`` loop — one XLA dispatch
+per step, per-call re-jits (the ``step_fn`` closure was redefined on every
+``ffd_register`` call), and a host round-trip between steps.  Budelmann et
+al. and Brunn et al. (PAPERS.md) get their registration wall-clock wins from
+keeping the whole loop resident on the accelerator; this module is that loop:
+
+* ``adam_scan`` — the pure form: ``iters`` Adam steps as a single
+  ``lax.scan``, traceable, so it nests under ``jax.vmap`` (the batched
+  engine) and under an outer ``jit`` (one compile per pyramid level).
+* ``make_adam_runner`` — the compiled form: a jitted runner whose
+  ``(params, m, v)`` buffers are donated on accelerator backends, and whose
+  data operands are arguments (not closures) so one compile serves every
+  call with the same shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adam_scan", "make_adam_runner"]
+
+
+def adam_scan(loss_fn, params, *, iters, lr, b1=0.9, b2=0.999, eps=1e-8,
+              m=None, v=None):
+    """Run ``iters`` Adam steps on ``loss_fn`` as one ``lax.scan``.
+
+    Pure function of its inputs (no jit inside) so it composes with
+    ``jax.jit`` / ``jax.vmap`` at the call site.
+
+    Returns ``(params, trace)`` where ``trace[k]`` is the loss after ``k+1``
+    updates (same convention as evaluating the loss after each step of the
+    seed's Python loop).  The final trace entry costs one extra forward pass;
+    the per-step entries reuse the forward already needed for the gradient.
+    """
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
+    m = jnp.zeros_like(params) if m is None else m
+    v = jnp.zeros_like(params) if v is None else v
+
+    def step(carry, i):
+        p, m, v = carry
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1**i)
+        vh = v / (1 - b2**i)
+        return (p - lr * mh / (jnp.sqrt(vh) + eps), m, v), loss
+
+    steps = jnp.arange(1, iters + 1, dtype=jnp.float32)
+    (p, _, _), pre = jax.lax.scan(step, (params, m, v), steps)
+    # pre[k] = loss *before* update k+1; shift by one and close with the
+    # final loss so trace[k] = loss after k+1 updates.
+    trace = jnp.concatenate([pre[1:], loss_fn(p)[None]])
+    return p, trace
+
+
+def make_adam_runner(loss_builder, *, iters, lr, b1=0.9, b2=0.999, eps=1e-8,
+                     donate=None):
+    """Build a jitted ``(params, m, v, *data) -> (params, trace)`` runner.
+
+    ``loss_builder(*data)`` returns the scalar loss function of the params;
+    the data arrays travel through jit as arguments, so callers that cache
+    the runner (e.g. by shape) pay one compile per configuration, not per
+    call.  ``(params, m, v)`` are donated unless ``donate=False`` (donation
+    is skipped on CPU, where XLA cannot honour it and only warns).
+    """
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+
+    def run(p, m, v, *data):
+        return adam_scan(loss_builder(*data), p, iters=iters, lr=lr,
+                         b1=b1, b2=b2, eps=eps, m=m, v=v)
+
+    return jax.jit(run, donate_argnums=(0, 1, 2) if donate else ())

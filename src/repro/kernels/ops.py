@@ -18,7 +18,11 @@ from repro.kernels.bsi_separable import bsi_separable_pallas
 from repro.kernels.bsi_tt import bsi_tt_pallas
 from repro.kernels.bsi_ttli import bsi_ttli_pallas
 
-__all__ = ["bsi_pallas", "pick_block_tiles"]
+__all__ = ["PALLAS_MODES", "bsi_pallas", "pick_block_tiles"]
+
+# Modes with a Pallas kernel (``gather`` has none — it is the baseline the
+# kernels beat).  The engine autotuner enumerates its candidates from this.
+PALLAS_MODES = ("tt", "ttli", "separable")
 
 # Budget for (control grid + out block + window temporaries) in VMEM.
 _VMEM_BUDGET_BYTES = 12 * 2**20
@@ -58,6 +62,8 @@ def bsi_pallas(phi, tile, *, mode="ttli", dtype=None, block_tiles=None, interpre
     kernel (``tt`` | ``ttli`` | ``separable``; ``gather`` has no kernel — it
     is the baseline the kernels beat).
     """
+    if mode not in PALLAS_MODES:
+        raise ValueError(f"no Pallas kernel for mode {mode!r}")
     if dtype is not None:
         phi = phi.astype(dtype)
     tile = tuple(int(t) for t in tile)
@@ -83,7 +89,7 @@ def bsi_pallas(phi, tile, *, mode="ttli", dtype=None, block_tiles=None, interpre
         out = bsi_separable_pallas(
             phi_p, *luts, tile=tile, block_tiles=block_tiles, interpret=interpret
         )
-    else:
+    else:  # unreachable: PALLAS_MODES checked above; keep dispatch explicit
         raise ValueError(f"no Pallas kernel for mode {mode!r}")
     return out[
         : num_tiles[0] * tile[0], : num_tiles[1] * tile[1], : num_tiles[2] * tile[2]

@@ -95,7 +95,8 @@ def test_collective_bytes_counted_inside_loops():
             y, _ = jax.lax.scan(body, x, None, length=4)
             return y
         x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
-        with jax.set_mesh(mesh):
+        ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+        with ctx:
             txt = jax.jit(f).lower(x).compile().as_text()
         s = analyze_hlo(txt)
         n = sum(s.collective_counts.values())

@@ -1,5 +1,8 @@
 """Property-based tests (hypothesis) for the system's mathematical invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="needs the 'dev' extra: pip install -e '.[dev]'")
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np

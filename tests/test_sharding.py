@@ -7,7 +7,7 @@ from jax.sharding import PartitionSpec as PS
 
 from repro.configs.base import get_config
 from repro.distributed.sharding import (
-    DECODE_RULES, LONG_CONTEXT_RULES, TRAIN_RULES, dedup_specs,
+    DECODE_RULES, LONG_CONTEXT_RULES, TRAIN_RULES, abstract_mesh, dedup_specs,
     partition_specs, sanitize_specs,
 )
 from repro.models import model as M
@@ -29,7 +29,7 @@ def test_rules_cover_all_logical_axes():
 
 
 def test_sanitize_drops_nondivisible_and_duplicates():
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    mesh = abstract_mesh((2, 2), ("data", "model"))
     leaf = jax.ShapeDtypeStruct((6, 3), jnp.float32)  # 6 % 2 == 0, 3 % 2 != 0
     spec = PS("data", "model")
     out = sanitize_specs(leaf, spec, mesh)
