@@ -14,9 +14,8 @@ import functools
 
 import jax
 
-from benchmarks.common import SCALED_VOLUMES, FULL_VOLUMES, emit, grid_for, time_fn
+from benchmarks.common import FULL_VOLUMES, SCALED_VOLUMES, emit, grid_for, time_fn
 from repro.core import ffd
-from repro.core.interpolate import interpolate
 
 TILES = [3, 4, 5, 6, 7]
 MODES = ["gather", "tt", "ttli", "separable"]

@@ -1,14 +1,23 @@
-"""Similarity metrics used by registration and its evaluation (paper §6-7)."""
+"""Evaluation metrics for registration quality (paper §6-7, Table 5).
+
+The *loss-form* terms the optimiser minimises live in
+``repro.core.similarity`` (the pluggable subsystem behind the
+``similarity=`` knob); ``ssd`` and ``ncc`` are re-exported from there for
+backwards compatibility.  This module keeps the evaluation-only measures:
+``mae`` (Table 5) and ``ssim``.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
-from jax import lax
+
+from repro.core.similarity import (
+    _norm01 as _norm,
+    ncc,
+    ssd,
+    uniform_filter as _uniform_filter,
+)
 
 __all__ = ["ssd", "mae", "ncc", "ssim"]
-
-
-def ssd(a, b):
-    return jnp.mean((a - b) ** 2)
 
 
 def mae(a, b):
@@ -16,29 +25,13 @@ def mae(a, b):
     return jnp.mean(jnp.abs(_norm(a) - _norm(b)))
 
 
-def _norm(x):
-    lo, hi = jnp.min(x), jnp.max(x)
-    return (x - lo) / jnp.maximum(hi - lo, 1e-8)
-
-
-def ncc(a, b):
-    a = a - jnp.mean(a)
-    b = b - jnp.mean(b)
-    return jnp.sum(a * b) / jnp.maximum(
-        jnp.sqrt(jnp.sum(a**2) * jnp.sum(b**2)), 1e-8
-    )
-
-
-def _uniform_filter(x, size):
-    w = jnp.ones((size,) * 3, x.dtype) / size**3
-    return lax.conv_general_dilated(
-        x[None, None], w[None, None], (1, 1, 1), "VALID",
-        dimension_numbers=("NCXYZ", "OIXYZ", "NCXYZ"),
-    )[0, 0]
-
-
 def ssim(a, b, *, window=7, k1=0.01, k2=0.03):
-    """Structured Similarity Index (3-D, uniform window — paper Table 5)."""
+    """Structured Similarity Index (3-D, uniform window — paper Table 5).
+
+    The window clamps to the volume's smallest extent, so sub-window³
+    volumes (coarse pyramid levels, tiny test fixtures) stay valid instead
+    of crashing the VALID convolution.
+    """
     a, b = _norm(a), _norm(b)
     c1, c2 = k1**2, k2**2
     mu_a = _uniform_filter(a, window)

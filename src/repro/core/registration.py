@@ -1,8 +1,10 @@
 """Non-rigid (FFD) and affine registration — the paper's application layer.
 
 A JAX re-build of the NiftyReg workflow the paper integrates into (§6):
-multi-resolution pyramid, SSD similarity, bending-energy regularisation,
-gradient-based optimisation of the control grid.  The expensive inner step —
+multi-resolution pyramid, a pluggable similarity term (SSD by default; NCC,
+local NCC and differentiable NMI for multi-modal pairs — see
+``repro.core.similarity``), bending-energy regularisation, gradient-based
+optimisation of the control grid.  The expensive inner step —
 expanding the control grid to the dense deformation field — is exactly the
 paper's BSI and is dispatched through ``repro.core.interpolate`` so any of
 the algorithm forms / kernels can be plugged in (``mode=``, ``impl=``;
@@ -27,8 +29,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import ffd, metrics
+from repro.core import ffd
 from repro.core.ffd import downsample2  # re-exported (seed API)
+from repro.core.similarity import resolve_similarity
 from repro.engine.autotune import resolve_bsi
 from repro.engine.batch import ffd_level_loss
 from repro.engine.loop import make_adam_runner
@@ -68,26 +71,31 @@ def _affine_warp(theta, moving, vol_shape):
 
 
 @functools.lru_cache(maxsize=32)
-def _affine_runner(vol_shape, iters, lr):
+def _affine_runner(vol_shape, iters, lr, similarity):
+    _, sim = resolve_similarity(similarity)
+
     def loss_builder(f, mov):
         def loss_fn(theta):
-            return metrics.ssd(_affine_warp(theta, mov, vol_shape), f)
+            return sim(_affine_warp(theta, mov, vol_shape), f)
 
         return loss_fn
 
     return make_adam_runner(loss_builder, iters=iters, lr=lr)
 
 
-def affine_register(fixed, moving, *, iters=60, lr=0.02):
-    """Optimise a 3x4 affine (around the volume centre) minimising SSD.
+def affine_register(fixed, moving, *, iters=60, lr=0.02, similarity="ssd"):
+    """Optimise a 3x4 affine (around the volume centre) on ``similarity``.
 
     The whole optimisation is one scan-compiled program; the runner is
-    cached by (shape, iters, lr), so repeat calls skip compilation.
+    cached by (shape, iters, lr, similarity), so repeat calls skip
+    compilation.  ``similarity`` is a registered name (``"ssd" | "ncc" |
+    "lncc" | "nmi"``) or a loss callable (lower = better).
     """
     fixed = jnp.asarray(fixed, jnp.float32)
     moving = jnp.asarray(moving, jnp.float32)
+    sim_key, _ = resolve_similarity(similarity)
     t0 = time.perf_counter()
-    runner = _affine_runner(fixed.shape, int(iters), float(lr))
+    runner = _affine_runner(fixed.shape, int(iters), float(lr), sim_key)
     theta0 = jnp.zeros((3, 4), jnp.float32)
     theta, trace = runner(theta0, jnp.zeros_like(theta0),
                           jnp.zeros_like(theta0), fixed, moving)
@@ -100,13 +108,14 @@ def affine_register(fixed, moving, *, iters=60, lr=0.02):
 
 
 @functools.lru_cache(maxsize=64)  # bounded: ~levels x configs in flight
-def _ffd_level_runner(vol_shape, tile, iters, lr, bending_weight, mode, impl):
+def _ffd_level_runner(vol_shape, tile, iters, lr, bending_weight, mode, impl,
+                      similarity):
     del vol_shape  # cache key only; shapes re-trace via jit
 
     def loss_builder(f, mov):
         return ffd_level_loss(f, mov, tile=tile,
                               bending_weight=bending_weight,
-                              mode=mode, impl=impl)
+                              mode=mode, impl=impl, similarity=similarity)
 
     return make_adam_runner(loss_builder, iters=iters, lr=lr)
 
@@ -122,6 +131,7 @@ def ffd_register(
     bending_weight=5e-3,
     mode="auto",
     impl="auto",
+    similarity="ssd",
     measure_bsi_time=False,
 ):
     """Multi-resolution FFD registration (NiftyReg workflow, paper §6).
@@ -130,14 +140,20 @@ def ffd_register(
     upsampled (re-expanded through BSI itself) between levels.  Each level's
     Adam loop is a single ``lax.scan`` program — one compile per pyramid
     level, cached across calls.  ``mode``/``impl`` default to ``"auto"``:
-    the autotuned fastest BSI form for the finest-level grid.
+    the autotuned fastest BSI form for the finest-level grid under the
+    chosen ``similarity``'s forward+backward workload.  ``similarity`` is a
+    registered name (``"ssd" | "ncc" | "lncc" | "nmi"`` — NMI being the
+    multi-modal NiftyReg path) or a ``(warped, fixed) -> scalar`` loss
+    callable (lower = better; see ``repro.core.similarity``).
     """
     fixed = jnp.asarray(fixed, jnp.float32)
     moving = jnp.asarray(moving, jnp.float32)
     tile = tuple(int(t) for t in tile)
+    sim_key, _ = resolve_similarity(similarity)
     mode, impl = resolve_bsi(
         mode, impl, ffd.grid_shape_for_volume(fixed.shape, tile), tile,
-        measure_grad=True)  # the loop's workload is forward+backward BSI
+        measure_grad=True,  # the loop's workload is forward+backward BSI
+        similarity=sim_key)  # ... and its backward mix is per-similarity
 
     pyramid = [(fixed, moving)]
     for _ in range(levels - 1):
@@ -159,7 +175,8 @@ def ffd_register(
             phi = ffd.upsample_grid(phi, gshape)
 
         runner = _ffd_level_runner(f.shape, tile, int(iters), float(lr),
-                                   float(bending_weight), mode, impl)
+                                   float(bending_weight), mode, impl,
+                                   sim_key)
         phi, trace = runner(phi, jnp.zeros_like(phi), jnp.zeros_like(phi),
                             f, m)
         phi.block_until_ready()

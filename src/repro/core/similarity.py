@@ -1,0 +1,208 @@
+"""Pluggable similarity subsystem — the loss-form terms registration optimises.
+
+The paper's application layer (§6) is NiftyReg's FFD workflow, whose
+multi-modal cases (CT↔CBCT liver) run on NMI rather than SSD; Budelmann et
+al. (PAPERS.md) likewise swap the distance measure (NGF) under an unchanged
+GPU optimisation loop.  This module makes the measure a layer, not a
+constant: a registry of *loss-form* similarity terms, each a scan-safe,
+``vmap``-able ``(warped, fixed) -> scalar`` with a uniform sign convention
+(**lower = better**), consumed by ``engine.batch.ffd_level_loss`` and
+everything above it via a ``similarity=`` knob (name or callable).
+
+Registered terms
+----------------
+``ssd``   mean squared intensity difference — mono-modal default.
+``ncc``   ``1 - (global normalised cross-correlation)`` — linear intensity
+          relationships.
+``lncc``  windowed local NCC (``1 - mean local cc²``) — spatially varying
+          intensity relationships; window clamps to the volume's smallest
+          extent so coarse pyramid levels (< window³) stay valid.
+``nmi``   ``2 - NMI`` from a Parzen-window (Gaussian soft-binned) joint
+          histogram — fully differentiable, the NiftyReg multi-modal path.
+          ``nmi(bins=...)`` builds variants with a different soft-bin count.
+
+Custom terms: pass any callable with the same contract as ``similarity=``,
+or add it to the registry with :func:`register_similarity`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "available_similarities",
+    "lncc",
+    "ncc",
+    "ncc_loss",
+    "nmi",
+    "register_similarity",
+    "resolve_similarity",
+    "similarity_token",
+    "ssd",
+    "uniform_filter",
+]
+
+_REGISTRY: dict = {}
+
+
+def register_similarity(name, fn=None):
+    """Register ``fn`` as similarity ``name`` (also usable as a decorator).
+
+    ``fn`` must be a scan-safe, ``vmap``-able ``(warped, fixed) -> scalar``
+    loss (lower = better) built from traceable jnp ops.
+    """
+    if fn is None:
+        return lambda f: register_similarity(name, f)
+    _REGISTRY[str(name)] = fn
+    return fn
+
+
+def available_similarities():
+    """Sorted names of the registered similarity terms."""
+    return sorted(_REGISTRY)
+
+
+def resolve_similarity(similarity):
+    """Resolve a name-or-callable to ``(key, loss_fn)``.
+
+    ``key`` is hashable and stable across calls (the registry name, or the
+    callable itself), so callers can use it in compiled-runner cache keys.
+    A callable that is itself registered canonicalises to its registry name,
+    so ``similarity="nmi"`` and ``similarity=nmi()`` share one cache key
+    (and one autotune entry) instead of duplicating compiles and sweeps.
+    """
+    if callable(similarity):
+        for name, fn in _REGISTRY.items():
+            if fn is similarity:
+                return name, fn
+        return similarity, similarity
+    try:
+        return str(similarity), _REGISTRY[str(similarity)]
+    except KeyError:
+        raise ValueError(
+            f"unknown similarity {similarity!r}; choose from "
+            f"{available_similarities()} or pass a callable"
+        ) from None
+
+
+def similarity_token(similarity) -> str:
+    """A short string naming ``similarity`` for disk-cache keys and logs.
+
+    Registry names and the built-in factories are fully self-describing
+    (factory tokens embed every parameter).  Custom callables fall back to
+    ``__qualname__`` — give distinct custom losses distinct qualnames or
+    their autotune cache entries will collide.
+    """
+    if callable(similarity):
+        return getattr(similarity, "__qualname__", repr(similarity))
+    return str(similarity)
+
+
+# --- shared pieces -----------------------------------------------------------
+
+
+def _norm01(x):
+    lo, hi = jnp.min(x), jnp.max(x)
+    return (x - lo) / jnp.maximum(hi - lo, 1e-8)
+
+
+def uniform_filter(x, size):
+    """3-D VALID box filter; ``size`` clamps to the smallest volume extent."""
+    size = max(1, min(int(size), *(int(s) for s in x.shape)))
+    w = jnp.ones((size,) * 3, x.dtype) / size**3
+    return lax.conv_general_dilated(
+        x[None, None],
+        w[None, None],
+        (1, 1, 1),
+        "VALID",
+        dimension_numbers=("NCXYZ", "OIXYZ", "NCXYZ"),
+    )[0, 0]
+
+
+# --- loss-form terms ---------------------------------------------------------
+
+
+@register_similarity("ssd")
+def ssd(warped, fixed):
+    """Mean squared intensity difference (mono-modal default)."""
+    return jnp.mean((warped - fixed) ** 2)
+
+
+def ncc(a, b):
+    """Global normalised cross-correlation coefficient (in ``[-1, 1]``)."""
+    a = a - jnp.mean(a)
+    b = b - jnp.mean(b)
+    return jnp.sum(a * b) / jnp.maximum(jnp.sqrt(jnp.sum(a**2) * jnp.sum(b**2)), 1e-8)
+
+
+@register_similarity("ncc")
+def ncc_loss(warped, fixed):
+    """``1 - NCC``: zero at perfect linear correlation."""
+    return 1.0 - ncc(warped, fixed)
+
+
+@functools.lru_cache(maxsize=None)
+def lncc(window=9, eps=1e-5):
+    """Build a windowed local-NCC loss: ``1 - mean(local cc²)``.
+
+    The factory is cached so equal-parameter calls return the same callable
+    (and therefore hit the same compiled-runner caches downstream).
+    """
+    window, eps = int(window), float(eps)
+
+    def lncc_loss(warped, fixed):
+        mu_w = uniform_filter(warped, window)
+        mu_f = uniform_filter(fixed, window)
+        var_w = uniform_filter(warped * warped, window) - mu_w**2
+        var_f = uniform_filter(fixed * fixed, window) - mu_f**2
+        cross = uniform_filter(warped * fixed, window) - mu_w * mu_f
+        cc = cross**2 / (var_w * var_f + eps)
+        return 1.0 - jnp.mean(cc)
+
+    lncc_loss.__qualname__ = f"lncc(window={window},eps={eps:g})"
+    return lncc_loss
+
+
+@functools.lru_cache(maxsize=None)
+def nmi(bins=32, sigma_ratio=0.5, eps=1e-8):
+    """Build a differentiable NMI loss (Parzen soft-binned joint histogram).
+
+    Intensities are min-max normalised to ``[0, 1]`` and scattered onto
+    ``bins`` centres with Gaussian Parzen windows of width ``sigma_ratio``
+    bin-widths (NiftyReg uses a cubic-spline window; a Gaussian keeps the
+    same smoothing with simpler traced code).  The joint histogram is a
+    single ``(bins, bins)`` matmul over voxels, so the loss nests under
+    ``lax.scan`` / ``vmap`` / ``jit`` unchanged.  Returns ``2 - NMI`` where
+    ``NMI = (H(a) + H(b)) / H(a, b)`` ∈ ``[1, 2]`` — lower = better.
+    """
+    bins, sigma_ratio, eps = int(bins), float(sigma_ratio), float(eps)
+    if bins < 2:
+        raise ValueError(f"nmi needs >= 2 bins, got {bins}")
+
+    def nmi_loss(warped, fixed):
+        a = _norm01(warped).reshape(-1)
+        b = _norm01(fixed).reshape(-1)
+        centres = jnp.linspace(0.0, 1.0, bins, dtype=a.dtype)
+        sigma = sigma_ratio / (bins - 1)
+        wa = jnp.exp(-0.5 * ((a[:, None] - centres[None, :]) / sigma) ** 2)
+        wb = jnp.exp(-0.5 * ((b[:, None] - centres[None, :]) / sigma) ** 2)
+        wa = wa / (jnp.sum(wa, axis=1, keepdims=True) + eps)
+        wb = wb / (jnp.sum(wb, axis=1, keepdims=True) + eps)
+        pab = wa.T @ wb / a.shape[0]
+        pa = jnp.sum(pab, axis=1)
+        pb = jnp.sum(pab, axis=0)
+        ha = -jnp.sum(pa * jnp.log(pa + eps))
+        hb = -jnp.sum(pb * jnp.log(pb + eps))
+        hab = -jnp.sum(pab * jnp.log(pab + eps))
+        return 2.0 - (ha + hb) / (hab + eps)
+
+    nmi_loss.__qualname__ = (
+        f"nmi(bins={bins},sigma_ratio={sigma_ratio:g},eps={eps:g})"
+    )
+    return nmi_loss
+
+
+register_similarity("lncc", lncc())
+register_similarity("nmi", nmi())

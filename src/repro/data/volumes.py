@@ -10,7 +10,6 @@ versions of paper Table 2; the exact table shapes are available via
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

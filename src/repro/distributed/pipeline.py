@@ -12,7 +12,6 @@ tests/test_distributed.py::test_pipeline_parallel_matches_serial.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

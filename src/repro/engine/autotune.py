@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.interpolate import MODES, interpolate
+from repro.core.similarity import resolve_similarity, similarity_token
 from repro.kernels.ops import PALLAS_MODES
 
 __all__ = ["BsiChoice", "autotune_bsi", "resolve_bsi", "default_candidates",
@@ -71,11 +72,27 @@ def _key(grid_shape, tile, channels) -> str:
 
 
 def _load_disk(path) -> dict:
+    """Best-effort read: a corrupt/truncated/wrong-shape cache is a miss.
+
+    A half-written or hand-edited ``bsi_autotune.json`` must trigger a clean
+    re-benchmark (which then rewrites the file), never an unhandled
+    ``JSONDecodeError``.
+    """
     try:
         with open(path) as fh:
-            return json.load(fh)
+            entries = json.load(fh)
     except (OSError, ValueError):
         return {}
+    return entries if isinstance(entries, dict) else {}
+
+
+def _parse_choice(hit):
+    """A malformed cache entry (missing/mistyped fields) is a miss."""
+    try:
+        return BsiChoice(str(hit["mode"]), str(hit["impl"]),
+                         float(hit["us_per_call"]))
+    except (KeyError, TypeError, ValueError):
+        return None
 
 
 def _store_disk(path, key, choice) -> None:
@@ -92,8 +109,8 @@ def _store_disk(path, key, choice) -> None:
 
 
 def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
-                 cache_path=None, use_cache=True,
-                 measure_grad=False) -> BsiChoice:
+                 cache_path=None, use_cache=True, measure_grad=False,
+                 similarity=None) -> BsiChoice:
     """Benchmark the candidate BSI forms and return (and cache) the winner.
 
     Args:
@@ -107,6 +124,11 @@ def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
       measure_grad: time forward+backward (the registration loop's workload)
         instead of the forward alone.  Candidates without a VJP (the Pallas
         kernels) are excluded automatically.
+      similarity: optional similarity name/callable.  With ``measure_grad``,
+        the timed objective becomes warp + that similarity on top of the BSI
+        expansion — the measurement (and its cache entry) is per-similarity,
+        since e.g. NMI's histogram backward changes the workload mix XLA
+        fuses around each BSI form.
     """
     grid_shape = tuple(int(g) for g in grid_shape)
     tile = tuple(int(t) for t in tile)
@@ -116,6 +138,8 @@ def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
     # the key names everything that can change the measurement
     key = (_key(grid_shape, tile, channels)
            + ("|grad" if measure_grad else "")
+           + ("" if similarity is None
+              else f"|sim={similarity_token(similarity)}")
            + "|" + ",".join(f"{m}/{i}" for m, i in cands))
     cache_path = default_cache_path() if cache_path is None else cache_path
     mem_key = (cache_path, key)
@@ -124,21 +148,41 @@ def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
         return _MEM_CACHE[mem_key]
     if use_cache:
         hit = _load_disk(cache_path).get(key)
-        if hit:
-            choice = BsiChoice(hit["mode"], hit["impl"],
-                               float(hit["us_per_call"]))
+        choice = _parse_choice(hit) if hit else None
+        if choice is not None:
             _MEM_CACHE[mem_key] = choice
             return choice
 
     rng = np.random.default_rng(0)
     phi = jnp.asarray(rng.standard_normal(grid_shape + (channels,)),
                       jnp.float32)
+    objective = None
+    if measure_grad and similarity is not None:
+        _, sim_fn = resolve_similarity(similarity)
+        dense_shape = tuple((g - 3) * t for g, t in zip(grid_shape, tile))
+        fix = jnp.asarray(rng.random(dense_shape), jnp.float32)
+        if channels == 3:
+            # the registration loop's objective: warp a volume by the
+            # expanded field, then score it against a fixed volume
+            from repro.core.ffd import warp_volume
+
+            mov = jnp.asarray(rng.random(dense_shape), jnp.float32)
+
+            def objective(out):
+                return sim_fn(warp_volume(mov, out), fix)
+        else:
+
+            def objective(out):
+                return sim_fn(out[..., 0], fix)
+
     best = None
     for mode, impl in cands:
         def fwd(p, mode=mode, impl=impl):
             return interpolate(p, tile, mode=mode, impl=impl)
 
-        if measure_grad:
+        if measure_grad and objective is not None:
+            fn = jax.jit(jax.grad(lambda p: objective(fwd(p))))
+        elif measure_grad:
             fn = jax.jit(jax.grad(lambda p: fwd(p).sum()))
         else:
             fn = jax.jit(fwd)  # consumers always run the form under jit

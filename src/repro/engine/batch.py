@@ -21,7 +21,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import ffd, metrics
+from repro.core import ffd
+from repro.core.similarity import resolve_similarity
 from repro.engine.loop import adam_scan
 
 __all__ = ["BatchRegistrationResult", "ffd_level_loss", "ffd_pipeline",
@@ -36,24 +37,28 @@ class BatchRegistrationResult:
     seconds: float  # wall time for the whole batch (incl. compile on miss)
 
 
-def ffd_level_loss(f, mov, *, tile, bending_weight, mode, impl):
-    """SSD + bending-energy objective for one pyramid level.
+def ffd_level_loss(f, mov, *, tile, bending_weight, mode, impl,
+                   similarity="ssd"):
+    """Similarity + bending-energy objective for one pyramid level.
 
-    Shared verbatim by the per-pair path (``core.registration.ffd_register``)
-    and the batched path so the two produce matching optimisations.
+    ``similarity`` is a registered name or a ``(warped, fixed) -> scalar``
+    loss callable (lower = better; see ``repro.core.similarity``).  Shared
+    verbatim by the per-pair path (``core.registration.ffd_register``) and
+    the batched path so the two produce matching optimisations.
     """
     vol_shape = f.shape
+    _, sim = resolve_similarity(similarity)
 
     def loss_fn(p):
         disp = ffd.dense_field(p, tile, vol_shape, mode=mode, impl=impl)
         warped = ffd.warp_volume(mov, disp)
-        return metrics.ssd(warped, f) + bending_weight * ffd.bending_energy(p)
+        return sim(warped, f) + bending_weight * ffd.bending_energy(p)
 
     return loss_fn
 
 
 def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
-                 mode, impl):
+                 mode, impl, similarity="ssd"):
     """Pure multi-level FFD registration of ONE ``(fixed, moving)`` pair.
 
     Traceable end-to-end (no timing, no host sync): the levels unroll into
@@ -74,7 +79,7 @@ def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
                else ffd.upsample_grid(phi, gshape))
         loss_fn = ffd_level_loss(f, m, tile=tile,
                                  bending_weight=bending_weight,
-                                 mode=mode, impl=impl)
+                                 mode=mode, impl=impl, similarity=similarity)
         phi, trace = adam_scan(loss_fn, phi, iters=iters, lr=lr)
         finals.append(trace[-1])
 
@@ -85,26 +90,29 @@ def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
 
 @functools.lru_cache(maxsize=32)
 def _compiled_batch(vol_shape, tile, levels, iters, lr, bending_weight,
-                    mode, impl):
+                    mode, impl, similarity):
     del vol_shape  # cache key only; jax re-traces on new shapes anyway
 
     def single(f, m):
         return ffd_pipeline(f, m, tile=tile, levels=levels, iters=iters,
                             lr=lr, bending_weight=bending_weight,
-                            mode=mode, impl=impl)
+                            mode=mode, impl=impl, similarity=similarity)
 
     return jax.jit(jax.vmap(single))
 
 
 def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
-                   lr=0.5, bending_weight=5e-3, mode="auto", impl="auto"):
+                   lr=0.5, bending_weight=5e-3, mode="auto", impl="auto",
+                   similarity="ssd"):
     """Register a batch of volume pairs in a single jitted program.
 
     Args:
       fixed, moving: ``(B, X, Y, Z)`` stacks of volume pairs (B >= 1).
       Remaining args as ``core.registration.ffd_register``; ``mode``/``impl``
       default to ``"auto"`` — the ``engine.autotune`` winner for this
-      ``(grid_shape, tile)``.
+      ``(grid_shape, tile)`` under the chosen ``similarity``'s
+      forward+backward workload.  ``similarity`` is a registered name
+      (``"ssd" | "ncc" | "lncc" | "nmi"``) or a loss callable.
 
     Returns a :class:`BatchRegistrationResult`; ``warped[b]`` matches what
     per-pair ``ffd_register`` produces for pair ``b``.
@@ -118,16 +126,18 @@ def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
     if fixed.shape != moving.shape:
         raise ValueError(f"shape mismatch: {fixed.shape} vs {moving.shape}")
     tile = tuple(int(t) for t in tile)
+    sim_key, _ = resolve_similarity(similarity)
 
     from repro.engine.autotune import resolve_bsi
 
     mode, impl = resolve_bsi(
         mode, impl, ffd.grid_shape_for_volume(fixed.shape[1:], tile), tile,
-        measure_grad=True)  # the loop's workload is forward+backward BSI
+        measure_grad=True,  # the loop's workload is forward+backward BSI
+        similarity=sim_key)  # ... and its backward mix is per-similarity
 
     t0 = time.perf_counter()
     fn = _compiled_batch(fixed.shape[1:], tile, levels, iters, float(lr),
-                         float(bending_weight), mode, impl)
+                         float(bending_weight), mode, impl, sim_key)
     warped, phi, losses = fn(fixed, moving)
     jax.block_until_ready(warped)
     return BatchRegistrationResult(warped, phi, losses,

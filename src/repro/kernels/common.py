@@ -12,7 +12,6 @@ TPU mapping of the paper's Thread-per-Tile scheme (DESIGN.md §2):
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = ["phi_window", "out_block_shape", "full_grid_spec", "lut_spec", "out_spec"]

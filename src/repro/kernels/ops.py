@@ -18,7 +18,7 @@ from repro.kernels.bsi_separable import bsi_separable_pallas
 from repro.kernels.bsi_tt import bsi_tt_pallas
 from repro.kernels.bsi_ttli import bsi_ttli_pallas
 
-__all__ = ["PALLAS_MODES", "bsi_pallas", "pick_block_tiles"]
+__all__ = ["PALLAS_MODES", "bsi_pallas", "default_interpret", "pick_block_tiles"]
 
 # Modes with a Pallas kernel (``gather`` has none — it is the baseline the
 # kernels beat).  The engine autotuner enumerates its candidates from this.
@@ -52,16 +52,36 @@ def _pad_tiles(phi, num_tiles, block_tiles):
     return phi, tuple(t + p[1] for t, p in zip(num_tiles, pads))
 
 
-@functools.partial(
-    jax.jit, static_argnames=("tile", "mode", "dtype", "block_tiles", "interpret")
-)
-def bsi_pallas(phi, tile, *, mode="ttli", dtype=None, block_tiles=None, interpret=True):
+def default_interpret() -> bool:
+    """Whether the kernels need ``interpret=True`` on the current backend.
+
+    Pallas TPU kernels compile only on TPU; everywhere else (CPU CI, GPU
+    hosts) they run under the interpreter.  Resolving this from
+    ``jax.default_backend()`` lets callers leave ``interpret`` unset and
+    still get compiled kernels on real hardware.
+    """
+    return jax.default_backend() != "tpu"
+
+
+def bsi_pallas(phi, tile, *, mode="ttli", dtype=None, block_tiles=None,
+               interpret=None):
     """Run one of the BSI Pallas kernels on a stored control grid.
 
     Args match ``repro.core.interpolate.interpolate``; ``mode`` selects the
     kernel (``tt`` | ``ttli`` | ``separable``; ``gather`` has no kernel — it
-    is the baseline the kernels beat).
+    is the baseline the kernels beat).  ``interpret`` defaults to
+    :func:`default_interpret` — compiled on TPU, interpreter elsewhere.
     """
+    if interpret is None:
+        interpret = default_interpret()
+    return _bsi_pallas_jit(phi, tile, mode=mode, dtype=dtype,
+                           block_tiles=block_tiles, interpret=bool(interpret))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "mode", "dtype", "block_tiles", "interpret")
+)
+def _bsi_pallas_jit(phi, tile, *, mode, dtype, block_tiles, interpret):
     if mode not in PALLAS_MODES:
         raise ValueError(f"no Pallas kernel for mode {mode!r}")
     if dtype is not None:

@@ -31,14 +31,14 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import (
-    SHAPES, cell_supported, get_config, input_specs, list_configs,
+    SHAPES, cell_supported, get_config, input_specs,
 )
 from repro.distributed.sharding import (
     DECODE_RULES, LONG_CONTEXT_RULES, TRAIN_RULES, partition_specs,
     sanitize_specs, shardings_for,
 )
-from repro.launch.mesh import make_production_mesh
 from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import model_flops, roofline_terms
 from repro.models import model as M
 from repro.optim.optimizer import OptConfig

@@ -27,7 +27,6 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.bsi_paper import BSI_WORKLOADS
 from repro.core import ffd
-from repro.core.interpolate import interpolate
 from repro.launch.dryrun import RESULTS, _mem_dict
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh

@@ -16,7 +16,6 @@ by walking the call graph from ENTRY and scaling every ``while`` body by its
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 

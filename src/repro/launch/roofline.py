@@ -103,9 +103,9 @@ def model_flops(cfg, shape) -> float:
 
 def active_param_count(cfg) -> float:
     """Parameter count, with MoE counting only routed-active experts."""
-    from repro.models.model import model_schema
-    from repro.models.schema import map_schema
     import jax
+
+    from repro.models.model import model_schema
 
     schema = model_schema(cfg)
     total = 0

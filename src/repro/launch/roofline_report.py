@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import pathlib
 
 from repro.launch.dryrun import RESULTS
 

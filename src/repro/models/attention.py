@@ -13,8 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.schema import P, lead
 from repro.models.layers import rope
+from repro.models.schema import P, lead
 
 __all__ = [
     "attn_schema", "project_qkv", "attend_blockwise", "attend_full",

@@ -11,8 +11,6 @@ Simplifications vs the exact HF checkpoints are listed in DESIGN.md §6.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -828,7 +826,6 @@ def cache_partition_specs(cfg: ModelConfig, rules):
 
     b = rules.get("batch")
     kv = rules.get("kv_len")
-    hm = rules.get("act_heads")
     fm = rules.get("act_ff")
 
     def kv_spec(lead_n):

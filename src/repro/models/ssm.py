@@ -27,7 +27,6 @@ __all__ = [
 # ------------------------------------------------------------------- mLSTM
 
 def mlstm_schema(d, n_heads, layers=None):
-    hd = d // n_heads
     pre, ax = lead(layers)
     return {
         "wq": P(pre + (d, d), ax + ("embed", "heads")),

@@ -2,7 +2,6 @@
 and the multi-pod dry-run (which lowers exactly these functions)."""
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +9,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import dedup_specs, partition_specs
 from repro.models import model as M
-from repro.optim.optimizer import OptConfig, opt_init, opt_update, abstract_opt
+from repro.optim.optimizer import OptConfig, abstract_opt, opt_init, opt_update
 
 __all__ = [
     "make_train_step", "make_prefill_step", "make_decode_step",
@@ -87,7 +86,6 @@ def make_train_step(cfg: ModelConfig, ocfg: OptConfig, rules=None,
             (grads, loss), _ = jax.lax.scan(acc, (zeros, 0.0), micro)
             grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
             loss = loss / grad_accum
-            parts = {}
 
         new_state = dict(state)
         if compressor is not None:

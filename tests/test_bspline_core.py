@@ -5,7 +5,7 @@ import pytest
 
 from repro.core.bspline import bspline_basis, lerp_luts, weight_lut
 from repro.core.interpolate import MODES, bsi_gather, interpolate
-from repro.kernels.ref import bsi_ref, bsi_points_ref
+from repro.kernels.ref import bsi_points_ref, bsi_ref
 
 
 def test_basis_partition_of_unity():

@@ -1,8 +1,5 @@
 """Distributed-runtime substrate tests: checkpoint/restart, resharding,
 compression, data pipeline determinism, straggler tracking."""
-import json
-import os
-import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +12,7 @@ from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.optim.compression import (
     compressed_psum, dequantize_int8, make_compressor, quantize_int8,
 )
-from repro.optim.optimizer import OptConfig, opt_init, opt_update
+from repro.optim.optimizer import OptConfig
 from repro.training.steps import init_train_state, make_train_step
 
 

@@ -1,8 +1,6 @@
 """Validate the trip-count-scaling HLO analyzer against unrolled oracles."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch.hlo_analysis import analyze_hlo
 

@@ -1,5 +1,4 @@
 """Pallas BSI kernels vs the pure-jnp oracle: shape/dtype sweeps (interpret)."""
-import itertools
 
 import jax.numpy as jnp
 import numpy as np
@@ -64,6 +63,27 @@ def test_kernel_block_shapes(block_tiles):
     ref = bsi_ref(phi, (5, 5, 5))
     out = ops.bsi_pallas(phi, (5, 5, 5), mode="ttli", block_tiles=block_tiles)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-6)
+
+
+def test_default_interpret_resolves_from_backend(monkeypatch):
+    """interpret defaults per-backend: compiled on TPU, interpreter elsewhere
+    — callers never thread the flag."""
+    import jax
+
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert ops.default_interpret() is False
+    for backend in ("cpu", "gpu"):
+        monkeypatch.setattr(jax, "default_backend", lambda b=backend: b)
+        assert ops.default_interpret() is True
+
+
+def test_bsi_pallas_runs_without_interpret_flag():
+    # on the CPU test backend the default must resolve to interpret mode
+    rng = np.random.default_rng(0)
+    phi = jnp.asarray(rng.standard_normal((6, 6, 6, 3)), jnp.float32)
+    out = ops.bsi_pallas(phi, (4, 4, 4), mode="ttli")
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(bsi_ref(phi, (4, 4, 4))), atol=3e-6)
 
 
 def test_pick_block_tiles_respects_budget():

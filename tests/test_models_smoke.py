@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import get_config, input_specs, SHAPES, list_configs
+from repro.configs.base import SHAPES, get_config, input_specs, list_configs
 from repro.models import model as M
 
 ARCHS = [
@@ -157,7 +157,6 @@ def test_decode_int8_cache_close_to_bf16():
 
 
 def test_input_specs_cover_all_cells():
-    from repro.configs.base import cell_supported
     n_cells = 0
     for arch in ARCHS:
         cfg = get_config(arch)

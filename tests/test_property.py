@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings
 
-from repro.core.bspline import bspline_basis, weight_lut
+from repro.core.bspline import bspline_basis
 from repro.core.interpolate import MODES
 from repro.kernels.ref import bsi_ref
 
