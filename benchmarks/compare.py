@@ -1,0 +1,164 @@
+"""Benchmark regression gate: fail CI when a ci-preset metric regresses.
+
+Compares a fresh ``BENCH_ci.json`` (``benchmarks/run.py --preset ci
+--json``) against the committed ``benchmarks/baseline_ci.json``.
+
+CI runners differ in absolute speed (and from the machine that wrote the
+baseline), so the gate has two tiers:
+
+* **Per-row** (precise): each gated row's ``new/baseline`` ratio is
+  divided by the median gated ratio — the machine-speed factor — and the
+  row fails when the normalised ratio exceeds ``1 + threshold`` (default
+  0.30).  Machine-invariant; catches a regression in any minority of rows
+  but is blind to a slowdown hitting every gated row equally.
+* **Suite-wide** (coarse): the sub-``--min-us`` timed rows (default floor
+  5 ms; micro-timings are too noisy to gate individually) serve as
+  calibration — if the gated median exceeds the calibration median by more
+  than ``--suite-threshold`` (default 2.0x), the whole gated suite slowed
+  in a way runner speed can't explain, and the gate fails.  The margin is
+  deliberately generous: micro-rows (dispatch-bound) and multi-second rows
+  (compute-bound) scale differently across runner classes, so a tight
+  bound here would flake.
+
+Rows present on only one side (new benchmarks seed the baseline at the
+next refresh) are reported but never fail the gate.  A gated row whose
+fresh measurement comes back zero/negative is a broken benchmark and
+fails.
+
+    python benchmarks/compare.py BENCH_ci.json
+    python benchmarks/compare.py BENCH_ci.json --threshold 0.5
+    python benchmarks/compare.py BENCH_ci.json --write-baseline  # refresh
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import statistics
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline_ci.json"
+
+
+def flatten(payload) -> dict:
+    """{"suite/row-name": us_per_call} for every row in a BENCH json."""
+    out = {}
+    for suite, rows in payload.get("suites", {}).items():
+        for row in rows:
+            try:
+                out[f"{suite}/{row['name']}"] = float(row["us_per_call"])
+            except (KeyError, TypeError, ValueError):
+                continue
+    return out
+
+
+def compare(new: dict, base: dict, *, threshold=0.30, min_us=5000.0,
+            suite_threshold=2.0):
+    """Returns ``(regressions, report_lines)``.
+
+    A row regresses when new/base exceeds the median new/base ratio (the
+    machine-speed factor) by more than ``threshold``, or when a gated row's
+    fresh measurement comes back zero/negative (a broken benchmark must not
+    read as an infinite speedup).  Additionally the gated *median* itself is
+    checked against the calibration rows (see module docstring) so a
+    slowdown hitting every gated row at once cannot normalise itself away.
+    """
+    gated = sorted(k for k in new if k in base and base[k] >= min_us)
+    shared = [k for k in gated if new[k] > 0]
+    # calibration rows: timed on both sides but below the gate floor —
+    # individually noisy, but their median anchors the suite-wide check
+    # because they are outside the gated suite.
+    calib = [k for k in new if k in base
+             and 0 < base[k] < min_us and new[k] > 0]
+    report = []
+    regressions = []
+    for k in sorted(set(new) ^ set(base)):
+        side = "new" if k in new else "baseline-only"
+        report.append(f"  (unmatched, skipped) [{side}] {k}")
+    for k in sorted(calib):
+        report.append(f"  (below --min-us, calibration only) {k}")
+    for k in gated:
+        if new[k] <= 0:
+            report.append(f"  [REGRESSION] {k}: baseline {base[k]:.0f}us but "
+                          f"new run measured {new[k]:.0f}us — broken row")
+            regressions.append((k, 0.0))
+    if not shared:
+        report.append("no comparable rows — gate passes vacuously"
+                      if not regressions else "no comparable rows")
+        return regressions, report
+
+    ratios = {k: new[k] / base[k] for k in shared}
+    machine = statistics.median(ratios.values())
+    report.append(f"machine-speed factor (median gated ratio): x{machine:.3f}"
+                  f" ({len(shared)} gated, {len(calib)} calibration rows)")
+    if len(calib) >= 3:
+        calib_med = statistics.median(new[k] / base[k] for k in calib)
+        suite = machine / calib_med if calib_med > 0 else 1.0
+        report.append(f"suite-wide check: gated median x{machine:.2f} vs "
+                      f"calibration median x{calib_med:.2f} "
+                      f"(ratio x{suite:.2f}, limit x{suite_threshold:.1f})")
+        if suite > suite_threshold:
+            report.append(
+                "  [REGRESSION] the entire gated suite slowed more than "
+                f"{suite_threshold:.1f}x beyond what the calibration rows "
+                "attribute to runner speed")
+            regressions.append(("<suite-wide>", suite))
+    for k in shared:
+        norm = ratios[k] / machine
+        flag = "REGRESSION" if norm > 1.0 + threshold else "ok"
+        report.append(f"  [{flag:10s}] {k}: {base[k]:.0f}us -> {new[k]:.0f}us"
+                      f" (normalised x{norm:.2f})")
+        if norm > 1.0 + threshold:
+            regressions.append((k, norm))
+    return regressions, report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", help="fresh BENCH json (benchmarks/run.py --json)")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="allowed normalised slowdown (0.30 = +30%%)")
+    ap.add_argument("--min-us", type=float, default=5000.0,
+                    help="gate rows at/above this baseline time; faster "
+                         "rows calibrate runner speed instead")
+    ap.add_argument("--suite-threshold", type=float, default=2.0,
+                    help="fail when the gated median exceeds the "
+                         "calibration median by this factor")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="copy NEW over the baseline instead of comparing")
+    args = ap.parse_args(argv)
+
+    if args.write_baseline:
+        payload = json.loads(Path(args.new).read_text())
+        if payload.get("failures"):
+            print(f"refusing to refresh the baseline from a run with failed "
+                  f"suites: {payload['failures']}")
+            return 2
+        shutil.copyfile(args.new, args.baseline)
+        print(f"baseline refreshed: {args.new} -> {args.baseline}")
+        return 0
+
+    new = json.loads(Path(args.new).read_text())
+    base = json.loads(Path(args.baseline).read_text())
+    if new.get("failures"):
+        print(f"new run has failed suites: {new['failures']}")
+        return 2
+    regressions, report = compare(flatten(new), flatten(base),
+                                  threshold=args.threshold,
+                                  min_us=args.min_us,
+                                  suite_threshold=args.suite_threshold)
+    print("\n".join(report))
+    if regressions:
+        print(f"\n{len(regressions)} metric(s) regressed more than "
+              f"{args.threshold:.0%} beyond the machine factor:")
+        for k, norm in regressions:
+            print(f"  {k}: x{norm:.2f}")
+        return 1
+    print("\nbench gate: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

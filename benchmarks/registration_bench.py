@@ -13,9 +13,28 @@ registration, so SSD demonstrably fails while NMI recovers the warp —
 quality is scored by warping the *original* moving volume with each
 recovered field.
 
+``--sharded`` instead reports data-parallel serving throughput: the same
+batch registered via ``register_batch(..., mesh=...)`` over growing device
+counts (pairs/sec vs devices — the pod-scaling curve the ROADMAP north-star
+asks for).  On a 1-device CPU host it re-executes itself with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the curve exists
+on laptops and in CI; on real accelerators it uses the devices as-is.
+
 CSV: name,us_per_call,derived.
 """
 from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+if str(_ROOT) not in sys.path:  # direct execution: python benchmarks/...py
+    sys.path.insert(0, str(_ROOT))
+try:
+    import repro  # noqa: F401  (installed via `pip install -e .`)
+except ModuleNotFoundError:  # src-layout checkout without install
+    sys.path.insert(0, str(_ROOT / "src"))
 
 from benchmarks.common import emit
 from repro.core import ffd as ffd_mod
@@ -114,9 +133,85 @@ def run(shape=(48, 40, 36), iters=25, affine_iters=30, multimodal=True):
     return rows
 
 
-def main(**kwargs):
-    return emit(run(**kwargs), ["name", "us_per_call", "derived"])
+def run_sharded(shape=(24, 20, 18), iters=6, batch=8, device_counts=None):
+    """Pairs/sec vs device count: ``register_batch(..., mesh=...)`` scaling.
+
+    One warm (compile-cached) timed run per mesh size; ``dev1`` is the
+    unsharded single-device baseline the speedup column is relative to.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.engine import make_registration_mesh, register_batch
+
+    ndev = len(jax.devices())
+    counts = (sorted({n for n in (1, 2, 4, 8, 16) if n <= ndev} | {ndev})
+              if device_counts is None else list(device_counts))
+    pairs = [make_pair(shape=shape, tile=TILE, magnitude=2.0, seed=s)
+             for s in range(batch)]
+    fixed = jnp.stack([p[0] for p in pairs])
+    moving = jnp.stack([p[1] for p in pairs])
+    kw = dict(tile=TILE, levels=2, iters=iters, mode="separable", impl="jnp")
+
+    rows = []
+    base_pps = None
+    for n in counts:
+        mesh = None if n == 1 else make_registration_mesh(n)
+        cold = register_batch(fixed, moving, mesh=mesh, **kw).seconds
+        t0 = time.perf_counter()
+        register_batch(fixed, moving, mesh=mesh, **kw)
+        warm = time.perf_counter() - t0
+        pps = batch / warm
+        base_pps = pps if base_pps is None else base_pps
+        rows.append(
+            (f"registration/sharded/dev{n}",
+             round(warm / batch * 1e6, 0),
+             f"pairs_per_s={pps:.3f}|speedup=x{pps / base_pps:.2f}"
+             f"|batch={batch}|cold_s={cold:.1f}"))
+    return rows
+
+
+def main(sharded=False, **kwargs):
+    rows = run_sharded(**kwargs) if sharded else run(**kwargs)
+    return emit(rows, ["name", "us_per_call", "derived"])
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    import os
+    import subprocess
+    import sys
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--sharded", action="store_true",
+                    help="pairs/sec vs device count via register_batch(mesh=)")
+    # None -> each path keeps its own defaults (run(): the paper-analogue
+    # (48, 40, 36) x 25 iters; run_sharded(): a CPU-budget (24, 20, 18) x 6)
+    ap.add_argument("--shape", type=int, nargs=3, default=None)
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="batch size for --sharded")
+    args = ap.parse_args()
+
+    kwargs = {}
+    if args.shape is not None:
+        kwargs["shape"] = tuple(args.shape)
+    if args.iters is not None:
+        kwargs["iters"] = args.iters
+
+    if args.sharded:
+        import jax
+
+        flags = os.environ.get("XLA_FLAGS", "")
+        if (jax.default_backend() == "cpu" and len(jax.devices()) == 1
+                and "xla_force_host_platform_device_count" not in flags):
+            # fake an 8-device pod and re-exec: the flag must be exported
+            # before jax initialises, which already happened in this process
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=8").strip()
+            sys.exit(subprocess.call([sys.executable, __file__]
+                                     + sys.argv[1:], env=env))
+        main(sharded=True, batch=args.batch, **kwargs)
+    else:
+        main(**kwargs)

@@ -10,7 +10,8 @@ Presets:
   * default — scaled-down volumes (CPU wall-time budget)
   * full    — the exact paper resolutions (``--full`` is an alias)
   * ci      — tiny smoke sizes; paired with ``--json BENCH_ci.json`` this is
-              the CI perf-trajectory artifact
+              the CI perf-trajectory artifact, gated against the committed
+              ``benchmarks/baseline_ci.json`` by ``benchmarks/compare.py``
 
 Roofline tables (assignment §Roofline) are produced separately from the
 dry-run artifacts by ``python -m repro.launch.roofline_report``.

@@ -41,6 +41,11 @@ def main():
     ap.add_argument("--batch", type=int, default=0,
                     help="also register a batch of this many pairs in one "
                          "jitted program (repro.engine.register_batch)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the --batch registrations over every local "
+                         "device (engine.shard.make_registration_mesh); on "
+                         "CPU fake a pod first: XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=8")
     ap.add_argument("--similarity", default="ssd",
                     choices=available_similarities(),
                     help="loss term the optimiser minimises "
@@ -50,6 +55,8 @@ def main():
                          "first (synthetic cross-modality pair; use "
                          "--similarity nmi)")
     args = ap.parse_args()
+    if args.mesh and not args.batch:
+        ap.error("--mesh shards the batched path; pass --batch N with it")
 
     tile = (6, 6, 6)
     shape = tuple(args.shape)
@@ -92,6 +99,15 @@ def main():
     if args.batch:
         import jax.numpy as jnp
 
+        mesh = None
+        label = f"batch x{args.batch}"
+        if args.mesh:
+            import jax
+
+            from repro.engine import make_registration_mesh
+
+            mesh = make_registration_mesh()
+            label += f" over {len(jax.devices())} device(s)"
         pairs = [make_pair(shape=shape, tile=tile, magnitude=2.2, seed=s)
                  for s in range(args.batch)]
         F = jnp.stack([p[0] for p in pairs])
@@ -101,17 +117,17 @@ def main():
             M = (1.0 - M) ** 1.5  # same monotone remap as the single pair
         batch = register_batch(F, M, tile=tile, levels=2, iters=args.iters,
                                mode=mode, impl=impl,
-                               similarity=args.similarity)
+                               similarity=args.similarity, mesh=mesh)
         cold = batch.seconds  # includes the one-time compile
         t0 = time.perf_counter()
         batch = register_batch(F, M, tile=tile, levels=2, iters=args.iters,
                                mode=mode, impl=impl,
-                               similarity=args.similarity)
+                               similarity=args.similarity, mesh=mesh)
         warm = time.perf_counter() - t0
         disp0 = ffd.dense_field(batch.params[0], tile, shape,
                                 mode=mode, impl=impl)
         mae = float(metrics.mae(ffd.warp_volume(sources[0], disp0), F[0]))
-        print(f"batch x{args.batch} (cold {cold:5.1f}s, warm {warm:5.2f}s"
+        print(f"{label} (cold {cold:5.1f}s, warm {warm:5.2f}s"
               f" = {warm / args.batch:5.2f}s/pair): mae[0]={mae:.4f}")
 
 

@@ -2,15 +2,18 @@
 
 The workload-scale layer over ``repro.core``: scan-compiled optimisation
 loops (``engine.loop``), whole-pipeline batching via ``vmap`` so N volume
-pairs register in one jitted program (``engine.batch.register_batch``), and
-a benchmark-and-cache autotuner that picks the fastest BSI form per
-configuration instead of hardcoded defaults (``engine.autotune``).
+pairs register in one jitted program (``engine.batch.register_batch``), a
+benchmark-and-cache autotuner that picks the fastest BSI form per
+configuration instead of hardcoded defaults (``engine.autotune``), and
+mesh-sharded data-parallel serving that places the batch axis over a device
+pod (``engine.shard``, via ``register_batch(..., mesh=...)``).
 """
 from repro.engine.autotune import (BsiChoice, autotune_bsi,
                                    default_candidates, resolve_bsi)
 from repro.engine.batch import (BatchRegistrationResult, ffd_pipeline,
                                 register_batch)
 from repro.engine.loop import adam_scan, make_adam_runner
+from repro.engine.shard import make_registration_mesh, sharded_pipeline
 
 __all__ = [
     "BsiChoice",
@@ -22,4 +25,6 @@ __all__ = [
     "register_batch",
     "adam_scan",
     "make_adam_runner",
+    "make_registration_mesh",
+    "sharded_pipeline",
 ]

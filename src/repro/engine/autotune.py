@@ -153,20 +153,29 @@ def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
             _MEM_CACHE[mem_key] = choice
             return choice
 
+    # Measure on ONE device explicitly.  Mesh-sharded serving (engine.shard)
+    # is pure data parallelism — each device runs the whole per-pair loop —
+    # so the single-device measurement *is* the per-shard workload, and
+    # pinning keeps the timing stable when the process holds a pod (or
+    # XLA_FLAGS-faked multi-device) context.
+    dev = jax.local_devices()[0]
     rng = np.random.default_rng(0)
-    phi = jnp.asarray(rng.standard_normal(grid_shape + (channels,)),
-                      jnp.float32)
+    phi = jax.device_put(
+        jnp.asarray(rng.standard_normal(grid_shape + (channels,)),
+                    jnp.float32), dev)
     objective = None
     if measure_grad and similarity is not None:
         _, sim_fn = resolve_similarity(similarity)
         dense_shape = tuple((g - 3) * t for g, t in zip(grid_shape, tile))
-        fix = jnp.asarray(rng.random(dense_shape), jnp.float32)
+        fix = jax.device_put(jnp.asarray(rng.random(dense_shape),
+                                         jnp.float32), dev)
         if channels == 3:
             # the registration loop's objective: warp a volume by the
             # expanded field, then score it against a fixed volume
             from repro.core.ffd import warp_volume
 
-            mov = jnp.asarray(rng.random(dense_shape), jnp.float32)
+            mov = jax.device_put(jnp.asarray(rng.random(dense_shape),
+                                             jnp.float32), dev)
 
             def objective(out):
                 return sim_fn(warp_volume(mov, out), fix)

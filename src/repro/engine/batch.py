@@ -90,8 +90,17 @@ def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
 
 @functools.lru_cache(maxsize=32)
 def _compiled_batch(vol_shape, tile, levels, iters, lr, bending_weight,
-                    mode, impl, similarity):
+                    mode, impl, similarity, mesh=None):
+    """One compiled program per (configuration, mesh) — ``mesh`` is part of
+    the cache key (``jax.sharding.Mesh`` hashes by devices + axis names), so
+    single-device and pod-sharded callers never collide, and two meshes over
+    the same devices share a compile."""
     del vol_shape  # cache key only; jax re-traces on new shapes anyway
+    if mesh is not None:
+        from repro.engine.shard import compile_sharded_batch
+
+        return compile_sharded_batch(mesh, tile, levels, iters, lr,
+                                     bending_weight, mode, impl, similarity)
 
     def single(f, m):
         return ffd_pipeline(f, m, tile=tile, levels=levels, iters=iters,
@@ -103,7 +112,7 @@ def _compiled_batch(vol_shape, tile, levels, iters, lr, bending_weight,
 
 def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
                    lr=0.5, bending_weight=5e-3, mode="auto", impl="auto",
-                   similarity="ssd"):
+                   similarity="ssd", mesh=None):
     """Register a batch of volume pairs in a single jitted program.
 
     Args:
@@ -113,6 +122,12 @@ def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
       ``(grid_shape, tile)`` under the chosen ``similarity``'s
       forward+backward workload.  ``similarity`` is a registered name
       (``"ssd" | "ncc" | "lncc" | "nmi"``) or a loss callable.
+      mesh: optional ``jax.sharding.Mesh`` (see
+        ``engine.shard.make_registration_mesh``) — the batch axis shards
+        over the mesh's data axes (``REGISTRATION_RULES``), one program
+        serving all devices.  Non-divisible batches are padded (repeating
+        the last pair) and stripped on return, so results are identical to
+        the unsharded path for any B.
 
     Returns a :class:`BatchRegistrationResult`; ``warped[b]`` matches what
     per-pair ``ffd_register`` produces for pair ``b``.
@@ -136,9 +151,17 @@ def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
         similarity=sim_key)  # ... and its backward mix is per-similarity
 
     t0 = time.perf_counter()
+    b = fixed.shape[0]
+    if mesh is not None:
+        from repro.engine.shard import batch_multiple, pad_batch
+
+        fixed, b = pad_batch(fixed, batch_multiple(mesh))
+        moving, _ = pad_batch(moving, batch_multiple(mesh))
     fn = _compiled_batch(fixed.shape[1:], tile, levels, iters, float(lr),
-                         float(bending_weight), mode, impl, sim_key)
+                         float(bending_weight), mode, impl, sim_key, mesh)
     warped, phi, losses = fn(fixed, moving)
     jax.block_until_ready(warped)
-    return BatchRegistrationResult(warped, phi, losses,
-                                   time.perf_counter() - t0)
+    seconds = time.perf_counter() - t0
+    if mesh is not None:  # strip the pad rows (see engine.shard.pad_batch)
+        warped, phi, losses = warped[:b], phi[:b], losses[:b]
+    return BatchRegistrationResult(warped, phi, losses, seconds)

@@ -1,0 +1,190 @@
+"""Mesh-sharded batched registration — data-parallel serving over a pod.
+
+``engine.batch.register_batch`` compiles one ``jit(vmap)`` program pinned to
+a single device; this module places that program's batch axis over a
+``jax.sharding.Mesh`` instead, so a pod of N accelerators serves N shards of
+a registration batch concurrently (Budelmann et al. and Brunn et al. — see
+PAPERS.md — both get intra-operative latencies from scaling the *loop*
+across devices, not just the kernel).
+
+The layout comes from ``repro.distributed.sharding.REGISTRATION_RULES``:
+batch → the mesh's data axes, everything per-pair (volume and grid geometry,
+the displacement channel, Adam moments, loss traces) replicated per shard.
+``sharded_pipeline`` re-states that placement with
+``with_sharding_constraint`` at every pyramid level and ``lax.scan``
+boundary, so GSPMD never has a reason to gather the batch axis mid-loop.
+
+Non-divisible batches are padded (repeating the last pair) up to the batch
+multiple of the mesh; ``register_batch`` strips the pad rows on return.
+Callers driving ``compile_sharded_batch`` / ``sharded_pipeline`` directly
+get the *padded* outputs and can mask the synthetic rows with
+``batch_mask``.  ``make_registration_mesh()`` works on real accelerators and
+on fake CPU devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+exported before jax is imported), which is how CI exercises this path.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.core import ffd
+from repro.distributed.sharding import REGISTRATION_RULES
+from repro.engine.loop import adam_scan
+
+__all__ = [
+    "VOLUME_AXES",
+    "GRID_AXES",
+    "LOSS_AXES",
+    "make_registration_mesh",
+    "batch_multiple",
+    "pad_batch",
+    "batch_mask",
+    "sharded_pipeline",
+    "compile_sharded_batch",
+]
+
+# Logical axes (REGISTRATION_RULES names) of the three result trees.
+VOLUME_AXES = ("batch", "vol_x", "vol_y", "vol_z")
+GRID_AXES = ("batch", "grid_x", "grid_y", "grid_z", "disp")
+LOSS_AXES = ("batch", "level")
+
+
+def make_registration_mesh(num_devices=None, *, devices=None):
+    """A 1-D ``("data",)`` mesh over the local devices (default: all).
+
+    The axis is named ``"data"`` because that is the name REGISTRATION_RULES
+    (and therefore ``batch_multiple`` / ``compile_sharded_batch``) binds the
+    batch axis to.  Works identically on a real accelerator pod and on fake
+    host devices: export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before*
+    importing jax to rehearse the 8-way layout on a laptop or in CI.
+    """
+    devs = tuple(devices) if devices is not None else tuple(jax.devices())
+    n = len(devs) if num_devices is None else int(num_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"need {n} devices for a registration mesh, have {len(devs)}; "
+            "on CPU export XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{max(n, 2)} before importing jax to fake a pod")
+    return jax.make_mesh((n,), ("data",), devices=devs[:n])
+
+
+def batch_multiple(mesh) -> int:
+    """Shard count of the batch axis — what batch sizes must pad up to."""
+    axes = REGISTRATION_RULES(mesh.axis_names)["batch"]
+    axes = (axes,) if isinstance(axes, str) else tuple(axes or ())
+    return math.prod(mesh.shape[a] for a in axes if a in mesh.shape) or 1
+
+
+def pad_batch(x, multiple):
+    """Pad the leading axis up to ``multiple`` by repeating the last entry.
+
+    Returns ``(padded, orig_b)``; callers strip results back to ``orig_b``
+    rows (see ``batch_mask`` for the validity mask).  Repeating a real pair
+    (rather than zero-filling) keeps the padded rows numerically ordinary —
+    no similarity term ever sees a degenerate all-zero volume.
+    """
+    b = x.shape[0]
+    pad = (-b) % int(multiple)
+    if pad:
+        x = jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)], axis=0)
+    return x, b
+
+
+def batch_mask(orig_b, padded_b):
+    """Boolean ``(padded_b,)`` mask: True for real rows, False for padding.
+
+    ``register_batch`` strips pad rows itself; this is for callers that use
+    ``compile_sharded_batch``/``sharded_pipeline`` directly and therefore
+    hold padded outputs (e.g. to exclude synthetic rows from aggregate
+    loss/quality statistics without a host round-trip).
+    """
+    return jnp.arange(int(padded_b)) < int(orig_b)
+
+
+def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
+                     bending_weight, mode, impl, similarity, mesh,
+                     rules=None):
+    """Batched multi-level FFD with explicit sharding constraints.
+
+    Same math as ``jax.vmap(engine.batch.ffd_pipeline)`` — the pyramid, the
+    per-level ``ffd_level_loss`` + ``adam_scan``, the final warp — but
+    batch-first, with the REGISTRATION_RULES placement re-asserted on the
+    pyramid, on the control grid entering and leaving every scan level, and
+    on the outputs.  Returns ``(warped, phi, losses)`` with shapes
+    ``(B, X, Y, Z)``, ``(B, *grid, 3)``, ``(B, levels)``.
+    """
+    from repro.engine.batch import ffd_level_loss
+
+    rules = REGISTRATION_RULES(mesh.axis_names) if rules is None else rules
+
+    def cons(x, axes):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, rules.spec(axes)))
+
+    pyramid = [(fixed, moving)]
+    for _ in range(levels - 1):
+        f, m = pyramid[-1]
+        pyramid.append((jax.vmap(ffd.downsample2)(f),
+                        jax.vmap(ffd.downsample2)(m)))
+    pyramid = [(cons(f, VOLUME_AXES), cons(m, VOLUME_AXES))
+               for f, m in pyramid[::-1]]  # coarse -> fine
+
+    phi = None
+    finals = []
+    for f, m in pyramid:
+        gshape = ffd.grid_shape_for_volume(f.shape[1:], tile)
+        if phi is None:
+            phi = jnp.zeros((f.shape[0],) + gshape + (3,), jnp.float32)
+        else:
+            phi = jax.vmap(lambda p, g=gshape: ffd.upsample_grid(p, g))(phi)
+        phi = cons(phi, GRID_AXES)
+
+        def level(f1, m1, p1):
+            loss_fn = ffd_level_loss(
+                f1, m1, tile=tile, bending_weight=bending_weight,
+                mode=mode, impl=impl, similarity=similarity)
+            return adam_scan(loss_fn, p1, iters=iters, lr=lr)
+
+        phi, trace = jax.vmap(level)(f, m, phi)
+        phi = cons(phi, GRID_AXES)
+        finals.append(trace[:, -1])
+
+    def finish(m1, p1):
+        disp = ffd.dense_field(p1, tile, m1.shape, mode=mode, impl=impl)
+        return ffd.warp_volume(m1, disp)
+
+    warped = cons(jax.vmap(finish)(moving, phi), VOLUME_AXES)
+    losses = cons(jnp.stack(finals, axis=1), LOSS_AXES)
+    return warped, phi, losses
+
+
+def compile_sharded_batch(mesh, tile, levels, iters, lr,
+                          bending_weight, mode, impl, similarity):
+    """Build the jitted sharded pipeline for one (mesh, configuration).
+
+    Uncached by design: ``engine.batch._compiled_batch`` is the single
+    program cache (its key includes ``mesh`` — ``jax.sharding.Mesh`` hashes
+    by devices + axis names, so two meshes over the same pod share a compile
+    and a re-deployed mesh gets its own).  ``in_shardings`` place the
+    incoming stacks batch-over-data (uncommitted host arrays are transferred
+    shard-by-shard, never materialised whole on one device);
+    ``out_shardings`` keep results distributed for the caller.
+    """
+    rules = REGISTRATION_RULES(mesh.axis_names)
+    vol_sh = NamedSharding(mesh, rules.spec(VOLUME_AXES))
+    out_sh = (vol_sh,
+              NamedSharding(mesh, rules.spec(GRID_AXES)),
+              NamedSharding(mesh, rules.spec(LOSS_AXES)))
+
+    def batched(F, M):
+        return sharded_pipeline(
+            F, M, tile=tile, levels=levels, iters=iters, lr=lr,
+            bending_weight=bending_weight, mode=mode, impl=impl,
+            similarity=similarity, mesh=mesh, rules=rules)
+
+    return jax.jit(batched, in_shardings=(vol_sh, vol_sh),
+                   out_shardings=out_sh)

@@ -7,8 +7,8 @@ from jax.sharding import PartitionSpec as PS
 
 from repro.configs.base import get_config
 from repro.distributed.sharding import (
-    DECODE_RULES, LONG_CONTEXT_RULES, TRAIN_RULES, abstract_mesh, dedup_specs,
-    partition_specs, sanitize_specs,
+    DECODE_RULES, LONG_CONTEXT_RULES, REGISTRATION_RULES, TRAIN_RULES,
+    abstract_mesh, dedup_specs, partition_specs, sanitize_specs,
 )
 from repro.models import model as M
 from repro.models.schema import abstract_params
@@ -26,6 +26,12 @@ def test_rules_cover_all_logical_axes():
     assert r2["batch"] == ("pod", "data")
     assert DECODE_RULES(("data", "model"))["kv_len"] == "model"
     assert LONG_CONTEXT_RULES(("data", "model"))["batch"] is None
+    # registration serving: batch over data, all per-pair axes replicated
+    rr = REGISTRATION_RULES(("data",))
+    assert rr["batch"] == ("data",)
+    assert rr.spec(("batch", "vol_x", "vol_y", "vol_z")) == \
+        PS(("data",), None, None, None)
+    assert REGISTRATION_RULES(("pod", "data"))["batch"] == ("pod", "data")
 
 
 def test_sanitize_drops_nondivisible_and_duplicates():
