@@ -6,19 +6,41 @@ dry-run (`repro.launch.dryrun_bsi`).  ``gather`` plays NiftyReg-TV (the
 paper's baseline), ``tt``/``ttli`` are the paper's contributions, and
 ``separable`` is this repo's beyond-paper form.
 
-CSV: name,us_per_call,derived  where derived = ns/voxel | speedup-vs-gather.
+``--grad`` instead times the registration loop's real workload — forward +
+backward through an SSD objective on the dense field — per
+``(mode, impl, grad_impl)``: ``xla`` is plain autodiff of that forward
+(whose transpose of the gather form is a per-voxel scatter-add), the other
+adjoints are the analytic gather-only custom VJP (``jnp`` separable-
+transpose / ``pallas`` kernel).  The derived column reports the backward-
+path speedup over the same forward under ``xla`` autodiff.
+
+CSV: name,us_per_call,derived  where derived = ns/voxel | speedup-vs-gather
+(forward sweep) or speedup-vs-xla-autodiff (``--grad`` sweep).
 """
 from __future__ import annotations
 
 import functools
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+if str(_ROOT) not in sys.path:  # direct execution: python benchmarks/...py
+    sys.path.insert(0, str(_ROOT))
+try:
+    import repro  # noqa: F401  (installed via `pip install -e .`)
+except ModuleNotFoundError:  # src-layout checkout without install
+    sys.path.insert(0, str(_ROOT / "src"))
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import FULL_VOLUMES, SCALED_VOLUMES, emit, grid_for, time_fn
 from repro.core import ffd
 
 TILES = [3, 4, 5, 6, 7]
 MODES = ["gather", "tt", "ttli", "separable"]
+GRAD_IMPLS = ["xla", "jnp"]  # pallas adjoint: interpret-only on CPU hosts
 
 
 def run(full=False, volumes=("phantom2", "porcine1"), reps=3, tiles=None,
@@ -48,10 +70,66 @@ def run(full=False, volumes=("phantom2", "porcine1"), reps=3, tiles=None,
     return rows
 
 
-def main(full=False, **kwargs):
-    return emit(run(full, **kwargs), ["name", "us_per_call", "derived"])
+def run_grad(full=False, volumes=("phantom2", "porcine1"), reps=3, tiles=None,
+             vol_table=None, modes=None, impls=("jnp",), grad_impls=None):
+    """Forward+backward rows per ``(mode, impl, grad_impl)`` (Adam-step load).
+
+    Times ``jit(grad(loss))`` where ``loss`` is SSD of the dense field
+    against a target — the BSI share of one optimisation step.  Each
+    ``(mode, impl)``'s ``xla`` row (when present) is the baseline its
+    custom-VJP rows are scored against.  ``impls`` defaults to the jnp
+    forwards (Pallas forwards run interpret-mode on CPU hosts; pass
+    ``impls=("jnp", "pallas")`` on TPU); combinations that cannot
+    differentiate — a Pallas forward under ``xla`` autodiff — are skipped.
+    Row names keep the historical ``{mode}-{grad_impl}`` form for the
+    default jnp forward so baseline_ci.json keys stay stable.
+    """
+    vols = vol_table or (FULL_VOLUMES if full else SCALED_VOLUMES)
+    rows = []
+    for t in (tiles or TILES):
+        tile = (t, t, t)
+        for mode in (modes or MODES):
+            for impl in impls:
+                base_t = None
+                for gi in (grad_impls or GRAD_IMPLS):
+                    if impl == "pallas" and gi == "xla":
+                        # the one known-undifferentiable combination (Pallas
+                        # forwards have no VJP under plain autodiff); any
+                        # other failure is a real regression and must crash
+                        # the suite so the CI gate sees it
+                        continue
+                    total_t = 0.0
+                    for name in volumes:
+                        vol = vols[name]
+                        phi = grid_for(vol, tile)
+                        rng = np.random.default_rng(1)
+                        tgt = jnp.asarray(rng.standard_normal(vol + (3,)),
+                                          jnp.float32)
+
+                        def loss(p, tile=tile, vol=vol, mode=mode, impl=impl,
+                                 gi=gi, tgt=tgt):
+                            d = ffd.dense_field(p, tile, vol, mode=mode,
+                                                impl=impl, grad_impl=gi)
+                            return jnp.sum((d - tgt) ** 2)
+
+                        total_t += time_fn(jax.jit(jax.grad(loss)), phi,
+                                           reps=reps)
+                    if gi == "xla":
+                        base_t = total_t
+                    label = mode if impl == "jnp" else f"{mode}/{impl}"
+                    rows.append((
+                        f"bsi_grad/tile{t}/{label}-{gi}",
+                        round(total_t / len(volumes) * 1e6, 1),
+                        (f"x{base_t / total_t:.2f}-vs-xla" if base_t
+                         else "no-xla-baseline"),
+                    ))
+    return rows
+
+
+def main(full=False, grad=False, **kwargs):
+    rows = run_grad(full, **kwargs) if grad else run(full, **kwargs)
+    return emit(rows, ["name", "us_per_call", "derived"])
 
 
 if __name__ == "__main__":
-    import sys
-    main(full="--full" in sys.argv)
+    main(full="--full" in sys.argv, grad="--grad" in sys.argv)

@@ -46,6 +46,11 @@ def _suites(preset):
             ("bsi_speed", lambda: bsi_speed.main(
                 tiles=[3, 5], reps=2, vol_table=TINY_VOLUMES,
                 volumes=tuple(TINY_VOLUMES))),
+            # forward+backward per (mode, grad_impl): the custom-VJP adjoint
+            # vs XLA autodiff of the same forward (ISSUE 4 acceptance rows)
+            ("bsi_grad", lambda: bsi_speed.main(
+                grad=True, tiles=[3, 5], reps=2, vol_table=TINY_VOLUMES,
+                volumes=tuple(TINY_VOLUMES))),
             ("registration_bench", lambda: registration_bench.main(
                 shape=(22, 20, 18), iters=4, affine_iters=10)),
         ]

@@ -7,6 +7,7 @@ displaced coordinates (trilinear image resampling, NiftyReg's default).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.interpolate import interpolate
@@ -35,7 +36,12 @@ def downsample2(vol):
 
 
 def upsample_grid(phi, new_shape):
-    """Upsample a control grid to a finer level's grid shape (trilinear)."""
+    """Upsample a control grid to a finer level's grid shape (trilinear).
+
+    One batched ``trilinear_sample`` (``vmap`` over the displacement channel)
+    so pyramid-level promotion compiles to a single gather instead of a
+    per-channel Python loop.
+    """
     old = phi.shape[:3]
     coords = jnp.stack(
         jnp.meshgrid(
@@ -44,13 +50,27 @@ def upsample_grid(phi, new_shape):
         ),
         axis=-1,
     )
-    comps = [trilinear_sample(phi[..., c], coords) for c in range(phi.shape[-1])]
-    return jnp.stack(comps, axis=-1) * 2.0  # displacements double at 2x res
+    comps = jax.vmap(trilinear_sample, in_axes=(3, None), out_axes=3)(
+        phi, coords)
+    return comps * 2.0  # displacements double at 2x res
 
 
-def dense_field(phi, tile, vol_shape, *, mode="separable", impl="jnp"):
-    """Expand control grid to a dense displacement field cropped to volume."""
-    full = interpolate(phi, tile, mode=mode, impl=impl)
+def dense_field(phi, tile, vol_shape, *, mode="separable", impl="jnp",
+                grad_impl="xla", compute_dtype=None):
+    """Expand control grid to a dense displacement field cropped to volume.
+
+    ``grad_impl`` selects how the expansion differentiates (``xla`` = plain
+    autodiff; ``jnp`` / ``pallas`` = the analytic gather-only adjoint via
+    ``jax.custom_vjp`` — see ``repro.core.interpolate``).  ``compute_dtype``
+    (e.g. ``bfloat16``) runs the interpolation in reduced precision while
+    params and the analytic adjoints' accumulation stay fp32; an *explicit*
+    ``grad_impl="xla"`` is the one combination whose backward follows the
+    compute dtype instead (plain autodiff of the reduced-precision forward
+    — the engine's ``"auto"`` therefore never picks it under a reduced
+    ``compute_dtype``).
+    """
+    full = interpolate(phi, tile, mode=mode, impl=impl, grad_impl=grad_impl,
+                       dtype=compute_dtype)
     return full[: vol_shape[0], : vol_shape[1], : vol_shape[2]]
 
 
@@ -83,12 +103,25 @@ def trilinear_sample(vol, coords):
     return c0 * (1 - tz) + c1 * tz
 
 
-def warp_volume(moving, disp):
-    """Resample ``moving`` at identity + displacement (both in voxel units)."""
+def warp_volume(moving, disp, compute_dtype=None):
+    """Resample ``moving`` at identity + displacement (both in voxel units).
+
+    ``compute_dtype`` (e.g. ``bfloat16``) casts the sampled *intensities*
+    (the memory-bound gather) — the mixed-precision partner of
+    ``dense_field``'s knob; the caller decides where to cast back up
+    (``engine.batch.ffd_level_loss`` scores the objective in the fixed
+    volume's dtype).  Sampling *coordinates* always stay fp32: bf16 cannot
+    represent integers above 256, so a bf16 identity grid would shift
+    sampling positions by whole voxels on paper-scale (>256-voxel) volumes.
+    """
+    coord_dtype = jnp.promote_types(disp.dtype, jnp.float32)
+    if compute_dtype is not None:
+        moving = jnp.asarray(moving, compute_dtype)
+    disp = jnp.asarray(disp, coord_dtype)
     X, Y, Z = moving.shape
-    xs = jnp.arange(X, dtype=disp.dtype)
-    ys = jnp.arange(Y, dtype=disp.dtype)
-    zs = jnp.arange(Z, dtype=disp.dtype)
+    xs = jnp.arange(X, dtype=coord_dtype)
+    ys = jnp.arange(Y, dtype=coord_dtype)
+    zs = jnp.arange(Z, dtype=coord_dtype)
     ident = jnp.stack(jnp.meshgrid(xs, ys, zs, indexing="ij"), axis=-1)
     return trilinear_sample(moving, ident + disp)
 

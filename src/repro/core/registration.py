@@ -109,13 +109,15 @@ def affine_register(fixed, moving, *, iters=60, lr=0.02, similarity="ssd"):
 
 @functools.lru_cache(maxsize=64)  # bounded: ~levels x configs in flight
 def _ffd_level_runner(vol_shape, tile, iters, lr, bending_weight, mode, impl,
-                      similarity):
+                      grad_impl, compute_dtype, similarity):
     del vol_shape  # cache key only; shapes re-trace via jit
 
     def loss_builder(f, mov):
         return ffd_level_loss(f, mov, tile=tile,
                               bending_weight=bending_weight,
-                              mode=mode, impl=impl, similarity=similarity)
+                              mode=mode, impl=impl, grad_impl=grad_impl,
+                              compute_dtype=compute_dtype,
+                              similarity=similarity)
 
     return make_adam_runner(loss_builder, iters=iters, lr=lr)
 
@@ -131,6 +133,8 @@ def ffd_register(
     bending_weight=5e-3,
     mode="auto",
     impl="auto",
+    grad_impl="auto",
+    compute_dtype=None,
     similarity="ssd",
     measure_bsi_time=False,
 ):
@@ -139,9 +143,13 @@ def ffd_register(
     Pyramid: coarse-to-fine on 2x-downsampled volumes; the control grid is
     upsampled (re-expanded through BSI itself) between levels.  Each level's
     Adam loop is a single ``lax.scan`` program — one compile per pyramid
-    level, cached across calls.  ``mode``/``impl`` default to ``"auto"``:
-    the autotuned fastest BSI form for the finest-level grid under the
-    chosen ``similarity``'s forward+backward workload.  ``similarity`` is a
+    level, cached across calls.  ``mode``/``impl``/``grad_impl`` default to
+    ``"auto"``: the autotuned fastest BSI forward x adjoint pair for the
+    finest-level grid under the chosen ``similarity``'s forward+backward
+    workload (``grad_impl`` selects between XLA autodiff and the analytic
+    gather-only custom VJP — see ``repro.core.interpolate``).
+    ``compute_dtype`` (e.g. ``"bfloat16"``) runs BSI + warp in reduced
+    precision with fp32 params and adjoint accumulation.  ``similarity`` is a
     registered name (``"ssd" | "ncc" | "lncc" | "nmi"`` — NMI being the
     multi-modal NiftyReg path) or a ``(warped, fixed) -> scalar`` loss
     callable (lower = better; see ``repro.core.similarity``).
@@ -150,10 +158,14 @@ def ffd_register(
     moving = jnp.asarray(moving, jnp.float32)
     tile = tuple(int(t) for t in tile)
     sim_key, _ = resolve_similarity(similarity)
-    mode, impl = resolve_bsi(
+    compute_dtype = (jnp.dtype(compute_dtype).name
+                     if compute_dtype is not None else None)
+    mode, impl, grad_impl = resolve_bsi(
         mode, impl, ffd.grid_shape_for_volume(fixed.shape, tile), tile,
+        grad_impl=grad_impl,  # the adjoint axis is tuned jointly
         measure_grad=True,  # the loop's workload is forward+backward BSI
-        similarity=sim_key)  # ... and its backward mix is per-similarity
+        similarity=sim_key,  # ... and its backward mix is per-similarity
+        compute_dtype=compute_dtype)  # ... measured/cached per dtype
 
     pyramid = [(fixed, moving)]
     for _ in range(levels - 1):
@@ -176,7 +188,7 @@ def ffd_register(
 
         runner = _ffd_level_runner(f.shape, tile, int(iters), float(lr),
                                    float(bending_weight), mode, impl,
-                                   sim_key)
+                                   grad_impl, compute_dtype, sim_key)
         phi, trace = runner(phi, jnp.zeros_like(phi), jnp.zeros_like(phi),
                             f, m)
         phi.block_until_ready()

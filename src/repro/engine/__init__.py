@@ -9,7 +9,8 @@ mesh-sharded data-parallel serving that places the batch axis over a device
 pod (``engine.shard``, via ``register_batch(..., mesh=...)``).
 """
 from repro.engine.autotune import (BsiChoice, autotune_bsi,
-                                   default_candidates, resolve_bsi)
+                                   default_candidates, default_grad_impls,
+                                   resolve_bsi)
 from repro.engine.batch import (BatchRegistrationResult, ffd_pipeline,
                                 register_batch)
 from repro.engine.loop import adam_scan, make_adam_runner
@@ -19,6 +20,7 @@ __all__ = [
     "BsiChoice",
     "autotune_bsi",
     "default_candidates",
+    "default_grad_impls",
     "resolve_bsi",
     "BatchRegistrationResult",
     "ffd_pipeline",

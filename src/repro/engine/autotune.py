@@ -26,12 +26,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.interpolate import MODES, interpolate
+from repro.core.interpolate import GRAD_IMPLS, MODES, interpolate
 from repro.core.similarity import resolve_similarity, similarity_token
 from repro.kernels.ops import PALLAS_MODES
 
 __all__ = ["BsiChoice", "autotune_bsi", "resolve_bsi", "default_candidates",
-           "default_cache_path"]
+           "default_grad_impls", "default_cache_path"]
 
 JNP_CANDIDATES = tuple((m, "jnp") for m in sorted(MODES))
 PALLAS_CANDIDATES = tuple((m, "pallas") for m in PALLAS_MODES)
@@ -42,6 +42,9 @@ class BsiChoice:
     mode: str
     impl: str
     us_per_call: float
+    # adjoint implementation ("xla" = plain autodiff — the pre-custom-VJP
+    # behaviour, and what legacy cache entries decode to)
+    grad_impl: str = "xla"
 
 
 _MEM_CACHE: dict = {}
@@ -63,6 +66,19 @@ def default_candidates():
     if jax.default_backend() != "cpu" or os.environ.get("REPRO_AUTOTUNE_PALLAS"):
         cands += list(PALLAS_CANDIDATES)
     return tuple(cands)
+
+
+def default_grad_impls():
+    """Adjoint implementations worth benchmarking on the current backend.
+
+    ``xla`` (plain autodiff) and ``jnp`` (the analytic separable-transpose
+    custom VJP) everywhere; the Pallas adjoint kernel joins off-CPU (or with
+    ``REPRO_AUTOTUNE_PALLAS=1``), same reasoning as :func:`default_candidates`.
+    """
+    impls = ["xla", "jnp"]
+    if jax.default_backend() != "cpu" or os.environ.get("REPRO_AUTOTUNE_PALLAS"):
+        impls.append("pallas")
+    return tuple(impls)
 
 
 def _key(grid_shape, tile, channels) -> str:
@@ -90,8 +106,9 @@ def _parse_choice(hit):
     """A malformed cache entry (missing/mistyped fields) is a miss."""
     try:
         return BsiChoice(str(hit["mode"]), str(hit["impl"]),
-                         float(hit["us_per_call"]))
-    except (KeyError, TypeError, ValueError):
+                         float(hit["us_per_call"]),
+                         str(hit.get("grad_impl", "xla")))
+    except (KeyError, TypeError, ValueError, AttributeError):
         return None
 
 
@@ -110,37 +127,61 @@ def _store_disk(path, key, choice) -> None:
 
 def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
                  cache_path=None, use_cache=True, measure_grad=False,
-                 similarity=None) -> BsiChoice:
+                 similarity=None, grad_impls=None,
+                 compute_dtype=None) -> BsiChoice:
     """Benchmark the candidate BSI forms and return (and cache) the winner.
 
     Args:
       grid_shape: stored control-grid dims ``(Tx+3, Ty+3, Tz+3)``.
       tile: control-point spacing ``(dx, dy, dz)``.
       channels: trailing channel count of the grid (3 for displacement).
-      candidates: optional ``((mode, impl), ...)`` override.
+      candidates: optional ``((mode, impl), ...)`` override — or, with
+        ``measure_grad``, ``((mode, impl, grad_impl), ...)`` triples.
       reps: timed repetitions per candidate (after a compile+warmup call).
       cache_path: JSON cache location (``None`` -> :func:`default_cache_path`).
       use_cache: bypass both caches when False (always re-measure).
       measure_grad: time forward+backward (the registration loop's workload)
-        instead of the forward alone.  Candidates without a VJP (the Pallas
-        kernels) are excluded automatically.
+        instead of the forward alone.  Candidates that cannot differentiate
+        (Pallas forwards under the plain-autodiff ``"xla"`` adjoint) are
+        excluded automatically.
       similarity: optional similarity name/callable.  With ``measure_grad``,
         the timed objective becomes warp + that similarity on top of the BSI
         expansion — the measurement (and its cache entry) is per-similarity,
         since e.g. NMI's histogram backward changes the workload mix XLA
         fuses around each BSI form.
+      grad_impls: adjoint implementations to cross ``(mode, impl)`` pairs
+        with under ``measure_grad`` (see ``interpolate``'s ``grad_impl``).
+        Defaults to ``("xla",)`` — the historical forward-only enumeration —
+        so forward-only and legacy callers are unaffected; the engine passes
+        :func:`default_grad_impls` to tune the full (fwd x adjoint) matrix.
+      compute_dtype: optional reduced compute dtype (e.g. ``"bfloat16"``).
+        The measured workload runs the BSI expansion (and warp) in that
+        dtype — what the registration loop will actually execute — and the
+        cache entry is per-dtype, so fp32 and bf16 callers never share a
+        possibly-differently-ranked winner.
     """
     grid_shape = tuple(int(g) for g in grid_shape)
     tile = tuple(int(t) for t in tile)
     channels = int(channels)
+    compute_dtype = (jnp.dtype(compute_dtype).name
+                     if compute_dtype is not None else None)
     cands = (default_candidates() if candidates is None
              else tuple(candidates))
+    gis = ("xla",) if grad_impls is None else tuple(grad_impls)
+    if measure_grad:
+        # cross (mode, impl) pairs with the adjoint axis; explicit triples
+        # pass through as-is
+        cands = tuple(c if len(c) == 3 else c + (gi,)
+                      for c in cands for gi in (gis if len(c) == 2 else ("",)))
+    else:
+        cands = tuple(c[:2] for c in cands)
     # the key names everything that can change the measurement
     key = (_key(grid_shape, tile, channels)
            + ("|grad" if measure_grad else "")
            + ("" if similarity is None
               else f"|sim={similarity_token(similarity)}")
-           + "|" + ",".join(f"{m}/{i}" for m, i in cands))
+           + ("" if compute_dtype is None else f"|cd={compute_dtype}")
+           + "|" + ",".join("/".join(c) for c in cands))
     cache_path = default_cache_path() if cache_path is None else cache_path
     mem_key = (cache_path, key)
 
@@ -178,16 +219,21 @@ def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
                                              jnp.float32), dev)
 
             def objective(out):
-                return sim_fn(warp_volume(mov, out), fix)
+                warped = warp_volume(mov, out, compute_dtype=compute_dtype)
+                return sim_fn(warped.astype(fix.dtype), fix)
         else:
 
             def objective(out):
-                return sim_fn(out[..., 0], fix)
+                return sim_fn(out[..., 0].astype(fix.dtype), fix)
 
     best = None
-    for mode, impl in cands:
-        def fwd(p, mode=mode, impl=impl):
-            return interpolate(p, tile, mode=mode, impl=impl)
+    for cand in cands:
+        mode, impl = cand[0], cand[1]
+        gi = cand[2] if len(cand) == 3 else "xla"
+
+        def fwd(p, mode=mode, impl=impl, gi=gi):
+            return interpolate(p, tile, mode=mode, impl=impl, grad_impl=gi,
+                               dtype=compute_dtype)
 
         if measure_grad and objective is not None:
             fn = jax.jit(jax.grad(lambda p: objective(fwd(p))))
@@ -206,7 +252,7 @@ def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
             times.append(time.perf_counter() - t0)
         us = float(np.median(times) * 1e6)
         if best is None or us < best.us_per_call:
-            best = BsiChoice(mode, impl, us)
+            best = BsiChoice(mode, impl, us, gi)
     if best is None:
         raise RuntimeError(
             f"no BSI candidate succeeded for grid={grid_shape} tile={tile} "
@@ -235,19 +281,52 @@ def _candidate_pool(mode, impl):
     return tuple(c for c in pool if mode in ("auto", c[0]))
 
 
-def resolve_bsi(mode, impl, grid_shape, tile, channels=3, **tune_kwargs):
-    """Resolve possibly-``"auto"`` (mode, impl) to concrete values.
+def resolve_bsi(mode, impl, grid_shape, tile, channels=3, *, grad_impl=None,
+                **tune_kwargs):
+    """Resolve possibly-``"auto"`` (mode, impl[, grad_impl]) to concrete values.
 
-    Explicit choices pass through untouched; an ``"auto"`` on either axis
-    narrows the candidate set to the fixed axis and autotunes the rest.
+    Explicit choices pass through untouched; an ``"auto"`` on any axis
+    narrows the candidate set to the fixed axes and autotunes the rest.
+    With ``grad_impl=None`` (forward-only callers) the return is the
+    historical ``(mode, impl)`` pair; passing a ``grad_impl`` — even an
+    explicit one — returns ``(mode, impl, grad_impl)`` and, when any axis is
+    ``"auto"``, tunes the joint forward+adjoint workload (``measure_grad``
+    is implied: the adjoint axis only exists in the backward).
     """
-    if mode != "auto" and impl != "auto":
-        return mode, impl
-    cands = _candidate_pool(mode, impl)
+    if grad_impl is None:
+        if mode != "auto" and impl != "auto":
+            return mode, impl
+        cands = _candidate_pool(mode, impl)
+        if not cands:
+            raise ValueError(
+                f"no BSI candidates match mode={mode!r} impl={impl!r}")
+        if len(cands) == 1:
+            return cands[0]
+        choice = autotune_bsi(grid_shape, tile, channels,
+                              candidates=cands, **tune_kwargs)
+        return choice.mode, choice.impl
+
+    if grad_impl != "auto" and grad_impl not in GRAD_IMPLS:
+        raise ValueError(
+            f"unknown grad_impl {grad_impl!r}; choose from {GRAD_IMPLS}"
+            " or 'auto'")
+    if mode != "auto" and impl != "auto" and grad_impl != "auto":
+        return mode, impl, grad_impl
+    gis = default_grad_impls() if grad_impl == "auto" else (grad_impl,)
+    if grad_impl == "auto" and tune_kwargs.get("compute_dtype") is not None:
+        # plain autodiff of a reduced-precision forward accumulates the
+        # adjoint in that precision; only the analytic adjoints keep the
+        # documented fp32 accumulation, so "auto" never picks "xla" here
+        # (an *explicit* grad_impl="xla" still passes through above)
+        gis = tuple(g for g in gis if g != "xla") or gis
+    cands = tuple(c + (gi,) for c in _candidate_pool(mode, impl)
+                  for gi in gis)
     if not cands:
-        raise ValueError(f"no BSI candidates match mode={mode!r} impl={impl!r}")
+        raise ValueError(f"no BSI candidates match mode={mode!r} "
+                         f"impl={impl!r} grad_impl={grad_impl!r}")
     if len(cands) == 1:
         return cands[0]
+    tune_kwargs["measure_grad"] = True
     choice = autotune_bsi(grid_shape, tile, channels,
                           candidates=cands, **tune_kwargs)
-    return choice.mode, choice.impl
+    return choice.mode, choice.impl, choice.grad_impl

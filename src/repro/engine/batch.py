@@ -38,27 +38,35 @@ class BatchRegistrationResult:
 
 
 def ffd_level_loss(f, mov, *, tile, bending_weight, mode, impl,
-                   similarity="ssd"):
+                   grad_impl="xla", compute_dtype=None, similarity="ssd"):
     """Similarity + bending-energy objective for one pyramid level.
 
     ``similarity`` is a registered name or a ``(warped, fixed) -> scalar``
     loss callable (lower = better; see ``repro.core.similarity``).  Shared
     verbatim by the per-pair path (``core.registration.ffd_register``) and
     the batched path so the two produce matching optimisations.
+    ``grad_impl`` picks the BSI adjoint (``xla`` autodiff vs the analytic
+    gather-only custom VJP — see ``repro.core.interpolate``);
+    ``compute_dtype`` runs the BSI expansion + warp in reduced precision
+    (params, adjoint accumulation and the objective stay fp32).
     """
     vol_shape = f.shape
     _, sim = resolve_similarity(similarity)
 
     def loss_fn(p):
-        disp = ffd.dense_field(p, tile, vol_shape, mode=mode, impl=impl)
-        warped = ffd.warp_volume(mov, disp)
+        disp = ffd.dense_field(p, tile, vol_shape, mode=mode, impl=impl,
+                               grad_impl=grad_impl,
+                               compute_dtype=compute_dtype)
+        warped = ffd.warp_volume(mov, disp, compute_dtype=compute_dtype)
+        warped = warped.astype(f.dtype)  # score the objective in fp32
         return sim(warped, f) + bending_weight * ffd.bending_energy(p)
 
     return loss_fn
 
 
 def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
-                 mode, impl, similarity="ssd"):
+                 mode, impl, grad_impl="xla", compute_dtype=None,
+                 similarity="ssd"):
     """Pure multi-level FFD registration of ONE ``(fixed, moving)`` pair.
 
     Traceable end-to-end (no timing, no host sync): the levels unroll into
@@ -79,18 +87,22 @@ def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
                else ffd.upsample_grid(phi, gshape))
         loss_fn = ffd_level_loss(f, m, tile=tile,
                                  bending_weight=bending_weight,
-                                 mode=mode, impl=impl, similarity=similarity)
+                                 mode=mode, impl=impl, grad_impl=grad_impl,
+                                 compute_dtype=compute_dtype,
+                                 similarity=similarity)
         phi, trace = adam_scan(loss_fn, phi, iters=iters, lr=lr)
         finals.append(trace[-1])
 
-    disp = ffd.dense_field(phi, tile, fixed.shape, mode=mode, impl=impl)
+    disp = ffd.dense_field(phi, tile, fixed.shape, mode=mode, impl=impl,
+                           grad_impl=grad_impl)
     warped = ffd.warp_volume(moving, disp)
     return warped, phi, jnp.stack(finals)
 
 
 @functools.lru_cache(maxsize=32)
 def _compiled_batch(vol_shape, tile, levels, iters, lr, bending_weight,
-                    mode, impl, similarity, mesh=None):
+                    mode, impl, grad_impl, compute_dtype, similarity,
+                    mesh=None):
     """One compiled program per (configuration, mesh) — ``mesh`` is part of
     the cache key (``jax.sharding.Mesh`` hashes by devices + axis names), so
     single-device and pod-sharded callers never collide, and two meshes over
@@ -100,28 +112,37 @@ def _compiled_batch(vol_shape, tile, levels, iters, lr, bending_weight,
         from repro.engine.shard import compile_sharded_batch
 
         return compile_sharded_batch(mesh, tile, levels, iters, lr,
-                                     bending_weight, mode, impl, similarity)
+                                     bending_weight, mode, impl, similarity,
+                                     grad_impl=grad_impl,
+                                     compute_dtype=compute_dtype)
 
     def single(f, m):
         return ffd_pipeline(f, m, tile=tile, levels=levels, iters=iters,
                             lr=lr, bending_weight=bending_weight,
-                            mode=mode, impl=impl, similarity=similarity)
+                            mode=mode, impl=impl, grad_impl=grad_impl,
+                            compute_dtype=compute_dtype,
+                            similarity=similarity)
 
     return jax.jit(jax.vmap(single))
 
 
 def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
                    lr=0.5, bending_weight=5e-3, mode="auto", impl="auto",
-                   similarity="ssd", mesh=None):
+                   grad_impl="auto", compute_dtype=None, similarity="ssd",
+                   mesh=None):
     """Register a batch of volume pairs in a single jitted program.
 
     Args:
       fixed, moving: ``(B, X, Y, Z)`` stacks of volume pairs (B >= 1).
-      Remaining args as ``core.registration.ffd_register``; ``mode``/``impl``
-      default to ``"auto"`` — the ``engine.autotune`` winner for this
-      ``(grid_shape, tile)`` under the chosen ``similarity``'s
-      forward+backward workload.  ``similarity`` is a registered name
-      (``"ssd" | "ncc" | "lncc" | "nmi"``) or a loss callable.
+      Remaining args as ``core.registration.ffd_register``;
+      ``mode``/``impl``/``grad_impl`` default to ``"auto"`` — the
+      ``engine.autotune`` winner for this ``(grid_shape, tile)`` under the
+      chosen ``similarity``'s joint forward+backward workload (the adjoint
+      axis picks between XLA autodiff and the analytic gather-only custom
+      VJP).  ``compute_dtype`` (e.g. ``"bfloat16"``) runs BSI + warp in
+      reduced precision with fp32 params/adjoint accumulation.
+      ``similarity`` is a registered name (``"ssd" | "ncc" | "lncc" |
+      "nmi"``) or a loss callable.
       mesh: optional ``jax.sharding.Mesh`` (see
         ``engine.shard.make_registration_mesh``) — the batch axis shards
         over the mesh's data axes (``REGISTRATION_RULES``), one program
@@ -142,13 +163,17 @@ def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
         raise ValueError(f"shape mismatch: {fixed.shape} vs {moving.shape}")
     tile = tuple(int(t) for t in tile)
     sim_key, _ = resolve_similarity(similarity)
+    compute_dtype = (jnp.dtype(compute_dtype).name
+                     if compute_dtype is not None else None)
 
     from repro.engine.autotune import resolve_bsi
 
-    mode, impl = resolve_bsi(
+    mode, impl, grad_impl = resolve_bsi(
         mode, impl, ffd.grid_shape_for_volume(fixed.shape[1:], tile), tile,
+        grad_impl=grad_impl,  # the adjoint axis is tuned jointly
         measure_grad=True,  # the loop's workload is forward+backward BSI
-        similarity=sim_key)  # ... and its backward mix is per-similarity
+        similarity=sim_key,  # ... and its backward mix is per-similarity
+        compute_dtype=compute_dtype)  # ... measured/cached per dtype
 
     t0 = time.perf_counter()
     b = fixed.shape[0]
@@ -158,7 +183,8 @@ def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
         fixed, b = pad_batch(fixed, batch_multiple(mesh))
         moving, _ = pad_batch(moving, batch_multiple(mesh))
     fn = _compiled_batch(fixed.shape[1:], tile, levels, iters, float(lr),
-                         float(bending_weight), mode, impl, sim_key, mesh)
+                         float(bending_weight), mode, impl, grad_impl,
+                         compute_dtype, sim_key, mesh)
     warped, phi, losses = fn(fixed, moving)
     jax.block_until_ready(warped)
     seconds = time.perf_counter() - t0

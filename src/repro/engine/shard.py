@@ -107,7 +107,7 @@ def batch_mask(orig_b, padded_b):
 
 def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
                      bending_weight, mode, impl, similarity, mesh,
-                     rules=None):
+                     grad_impl="xla", compute_dtype=None, rules=None):
     """Batched multi-level FFD with explicit sharding constraints.
 
     Same math as ``jax.vmap(engine.batch.ffd_pipeline)`` — the pyramid, the
@@ -146,7 +146,8 @@ def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
         def level(f1, m1, p1):
             loss_fn = ffd_level_loss(
                 f1, m1, tile=tile, bending_weight=bending_weight,
-                mode=mode, impl=impl, similarity=similarity)
+                mode=mode, impl=impl, grad_impl=grad_impl,
+                compute_dtype=compute_dtype, similarity=similarity)
             return adam_scan(loss_fn, p1, iters=iters, lr=lr)
 
         phi, trace = jax.vmap(level)(f, m, phi)
@@ -154,7 +155,8 @@ def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
         finals.append(trace[:, -1])
 
     def finish(m1, p1):
-        disp = ffd.dense_field(p1, tile, m1.shape, mode=mode, impl=impl)
+        disp = ffd.dense_field(p1, tile, m1.shape, mode=mode, impl=impl,
+                               grad_impl=grad_impl)
         return ffd.warp_volume(m1, disp)
 
     warped = cons(jax.vmap(finish)(moving, phi), VOLUME_AXES)
@@ -163,7 +165,8 @@ def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
 
 
 def compile_sharded_batch(mesh, tile, levels, iters, lr,
-                          bending_weight, mode, impl, similarity):
+                          bending_weight, mode, impl, similarity,
+                          grad_impl="xla", compute_dtype=None):
     """Build the jitted sharded pipeline for one (mesh, configuration).
 
     Uncached by design: ``engine.batch._compiled_batch`` is the single
@@ -184,6 +187,7 @@ def compile_sharded_batch(mesh, tile, levels, iters, lr,
         return sharded_pipeline(
             F, M, tile=tile, levels=levels, iters=iters, lr=lr,
             bending_weight=bending_weight, mode=mode, impl=impl,
+            grad_impl=grad_impl, compute_dtype=compute_dtype,
             similarity=similarity, mesh=mesh, rules=rules)
 
     return jax.jit(batched, in_shardings=(vol_sh, vol_sh),

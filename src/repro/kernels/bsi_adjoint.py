@@ -1,0 +1,127 @@
+"""Gather-based BSI adjoint Pallas kernel — thread-per-control-point.
+
+The adjoint mirror of the forward kernels' Thread-per-Tile scheme: where the
+forward broadcasts a VMEM-resident control grid over blocks of voxels, the
+backward reduces a VMEM-resident voxel cotangent over blocks of *control
+points*.  XLA's transpose of the gather/tt/ttli forwards is a per-voxel
+scatter-add into the control grid — the maximal-data-movement pattern the
+paper's §3 design exists to avoid; this kernel replaces it with the
+separable-transpose contraction (``core.interpolate.bsi_adjoint_separable``)
+run per control-point block:
+
+* the dense cotangent is zero-padded by 3 tiles per axis (``ops.py``), so
+  every control point uniformly owns the padded-tile window ``[i, i+4)`` —
+  the exact mirror of the forward's ``(bt+3)^3`` halo window and the same
+  Eq. (A.4) overlap saving, now on the gradient;
+* each Pallas grid cell reduces its ``((bc+3)*d)^3`` cotangent window to a
+  ``bc^3`` block of control-point gradients with three per-axis
+  ``dot_general`` sweeps (MXU-friendly) + 4-band overlap-adds, accumulated
+  in fp32 on-chip;
+* the control-grid gradient (the small array) is written exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+__all__ = ["bsi_adjoint_separable_pallas"]
+
+
+def _band_sum(c4, b):
+    """Overlap-add the four shifted bands: out[j] = sum_l c4[l, j + 3 - l].
+
+    ``c4``: ``(4, bc+3, R)`` per-band contractions over padded tiles;
+    returns ``(bc, R)``.  Band ``l`` contributes tile ``j + 3 - l`` to
+    control point ``j`` — the transpose of the forward's ``phi[t + l]`` read.
+    """
+    return sum(c4[l, 3 - l : 3 - l + b] for l in range(4))
+
+
+def _kernel(wx_ref, wy_ref, wz_ref, g_ref, out_ref, *, tile, block_ctrl):
+    dx, dy, dz = tile
+    bx, by, bz = block_ctrl
+    c = out_ref.shape[-1]
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+    # This cell's cotangent window: padded tiles [i0, i0 + bc + 3) per axis.
+    win = g_ref[
+        pl.ds(i * bx * dx, (bx + 3) * dx),
+        pl.ds(j * by * dy, (by + 3) * dy),
+        pl.ds(k * bz * dz, (bz + 3) * dz),
+        :,
+    ].astype(jnp.float32)  # fp32 on-chip accumulation for bf16 cotangents
+    wx = wx_ref[...].astype(jnp.float32)
+    wy = wy_ref[...].astype(jnp.float32)
+    wz = wz_ref[...].astype(jnp.float32)
+    X, Y = (bx + 3) * dx, (by + 3) * dy
+
+    # z sweep: contract the in-tile voxel axis against the LUT, then
+    # overlap-add -> (X, Y, bz, C).  Reverse axis order (z, y, x) so the
+    # intermediates shrink as early as possible.
+    u = win.reshape(X * Y, bz + 3, dz, c)
+    c4 = jax.lax.dot_general(
+        wz, u, (((0,), (2,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (4, X*Y, bz+3, C)
+    h = _band_sum(jnp.moveaxis(c4, 1, 3).reshape(4, bz + 3, c * X * Y), bz)
+    h = h.reshape(bz, c, X, Y)
+    # y sweep -> (X, by, bz, C) laid out as (by, bz*C*X)
+    u = h.reshape(bz * c * X, by + 3, dy).transpose(1, 2, 0)
+    c4 = jax.lax.dot_general(
+        wy, u, (((0,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (4, by+3, bz*C*X)
+    h = _band_sum(c4, by).reshape(by, bz, c, X)
+    # x sweep -> (bx, by, bz, C)
+    u = h.reshape(by * bz * c, bx + 3, dx).transpose(1, 2, 0)
+    c4 = jax.lax.dot_general(
+        wx, u, (((0,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (4, bx+3, by*bz*C)
+    h = _band_sum(c4, bx).reshape(bx, by, bz, c)
+    out_ref[...] = h.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "block_ctrl", "out_dtype", "interpret")
+)
+def bsi_adjoint_separable_pallas(gp, wx, wy, wz, *, tile, block_ctrl,
+                                 out_dtype=jnp.float32, interpret=True):
+    """Padded dense cotangent -> control-grid cotangent, blocked.
+
+    Args:
+      gp: ``((Nx+3)*dx, (Ny+3)*dy, (Nz+3)*dz, C)`` cotangent zero-padded by
+        3 tiles per axis (``ops.bsi_adjoint_pallas`` pads), where ``N*`` is
+        the stored control count, padded up to a ``block_ctrl`` multiple.
+      wx, wy, wz: ``(d, 4)`` aligned-grid weight LUTs.
+      tile: ``(dx, dy, dz)`` spacing; ``block_ctrl``: control points per
+        Pallas grid cell (must divide ``N*``).
+
+    Returns:
+      ``(Nx, Ny, Nz, C)`` control-grid cotangent in ``out_dtype``.
+    """
+    dx, dy, dz = tile
+    c = gp.shape[3]
+    nx, ny, nz = (s // d - 3 for s, d in zip(gp.shape[:3], tile))
+    bx, by, bz = block_ctrl
+    assert nx % bx == 0 and ny % by == 0 and nz % bz == 0, (gp.shape, block_ctrl)
+    grid = (nx // bx, ny // by, nz // bz)
+    out_shape = jax.ShapeDtypeStruct((nx, ny, nz, c), out_dtype)
+    return pl.pallas_call(
+        functools.partial(_kernel, tile=tile, block_ctrl=block_ctrl),
+        grid=grid,
+        in_specs=[
+            common.lut_spec(wx.shape),
+            common.lut_spec(wy.shape),
+            common.lut_spec(wz.shape),
+            common.full_grid_spec(gp.shape),
+        ],
+        out_specs=pl.BlockSpec(
+            (bx, by, bz, c), lambda i, j, k: (i, j, k, 0)
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(wx, wy, wz, gp)

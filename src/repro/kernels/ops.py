@@ -14,11 +14,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bspline import lerp_luts, weight_lut
+from repro.kernels.bsi_adjoint import bsi_adjoint_separable_pallas
 from repro.kernels.bsi_separable import bsi_separable_pallas
 from repro.kernels.bsi_tt import bsi_tt_pallas
 from repro.kernels.bsi_ttli import bsi_ttli_pallas
 
-__all__ = ["PALLAS_MODES", "bsi_pallas", "default_interpret", "pick_block_tiles"]
+__all__ = ["PALLAS_MODES", "bsi_pallas", "bsi_adjoint_pallas",
+           "default_interpret", "pick_block_tiles"]
 
 # Modes with a Pallas kernel (``gather`` has none — it is the baseline the
 # kernels beat).  The engine autotuner enumerates its candidates from this.
@@ -29,17 +31,30 @@ _VMEM_BUDGET_BYTES = 12 * 2**20
 _DEFAULT_BLOCK_TILES = (4, 4, 4)  # cubes maximise halo overlap (paper §3.4)
 
 
+def _shrink_to_budget(limits, bytes_fn, budget):
+    """Clamp the default block to ``limits``, then halve the largest axis
+    until ``bytes_fn(block)`` fits half the budget (or every axis is 1).
+
+    The clamp means tiny grids never budget for (and pad up to) blocks
+    larger than the whole grid.  Shared by the forward (tile-block) and
+    adjoint (control-point-block) pickers, which differ only in what the
+    block's bytes are.
+    """
+    b = [min(d, max(1, int(n))) for d, n in zip(_DEFAULT_BLOCK_TILES, limits)]
+    while bytes_fn(b) >= budget // 2 and max(b) > 1:
+        b[b.index(max(b))] = max(1, max(b) // 2)
+    return tuple(b)
+
+
 def pick_block_tiles(num_tiles, tile, channels, itemsize, budget=_VMEM_BUDGET_BYTES):
     """Pick a tile-block shape: cube-ish, bounded by the VMEM budget."""
-    bt = list(_DEFAULT_BLOCK_TILES)
-    while True:
-        out_bytes = (
-            bt[0] * tile[0] * bt[1] * tile[1] * bt[2] * tile[2] * channels * itemsize
-        )
-        win_bytes = (bt[0] + 3) * (bt[1] + 3) * (bt[2] + 3) * channels * itemsize
-        if out_bytes + 8 * win_bytes < budget // 2 or max(bt) == 1:
-            return tuple(bt)
-        bt[bt.index(max(bt))] = max(1, max(bt) // 2)
+
+    def block_bytes(bt):
+        out = bt[0] * tile[0] * bt[1] * tile[1] * bt[2] * tile[2]
+        win = (bt[0] + 3) * (bt[1] + 3) * (bt[2] + 3)
+        return (out + 8 * win) * channels * itemsize
+
+    return _shrink_to_budget(num_tiles, block_bytes, budget)
 
 
 def _pad_tiles(phi, num_tiles, block_tiles):
@@ -114,3 +129,96 @@ def _bsi_pallas_jit(phi, tile, *, mode, dtype, block_tiles, interpret):
     return out[
         : num_tiles[0] * tile[0], : num_tiles[1] * tile[1], : num_tiles[2] * tile[2]
     ]
+
+
+def pick_block_ctrl(num_ctrl, tile, channels, itemsize,
+                    budget=_VMEM_BUDGET_BYTES):
+    """Pick the adjoint kernel's control-point block: cube-ish, VMEM-bounded.
+
+    The dominant temporary is the ``((bc+3)*d)^3`` cotangent window each grid
+    cell reduces (read bf16/f32, accumulated f32), so the window is what the
+    budget bounds (4x headroom for the sweep temporaries); the ``bc^3``
+    output block is negligible next to it.
+    """
+
+    def block_bytes(bc):
+        win = ((bc[0] + 3) * tile[0] * (bc[1] + 3) * tile[1]
+               * (bc[2] + 3) * tile[2])
+        return 4 * win * channels * itemsize
+
+    return _shrink_to_budget(num_ctrl, block_bytes, budget)
+
+
+def bsi_adjoint_pallas(g, tile, *, dtype=None, block_ctrl=None,
+                       interpret=None):
+    """Run the Pallas BSI adjoint: dense cotangent -> control-grid cotangent.
+
+    The transpose of :func:`bsi_pallas` (same answer for every forward mode —
+    BSI is linear, all modes compute the same function).  ``g`` is the
+    ``(Tx*dx, Ty*dy, Tz*dz, C)`` cotangent of the dense field; returns the
+    ``(Tx+3, Ty+3, Tz+3, C)`` control-grid cotangent in ``dtype`` (default
+    float32 — fp32 accumulation even for bf16 cotangents).  ``interpret``
+    defaults to :func:`default_interpret`.
+
+    The dispatcher zero-pads ``g`` by 3 tiles per axis so every control
+    point uniformly owns the padded-tile window ``[i, i+4)`` (the adjoint
+    mirror of the forward halo), pads the control count up to a block
+    multiple, and z-chunks the padded cotangent when it exceeds the VMEM
+    budget (the level-2 Eq. A.4 overlap scheme, on the gradient).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _bsi_adjoint_jit(g, tuple(int(t) for t in tile), dtype=dtype,
+                            block_ctrl=block_ctrl, interpret=bool(interpret))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "dtype", "block_ctrl", "interpret")
+)
+def _bsi_adjoint_jit(g, tile, *, dtype, block_ctrl, interpret):
+    out_dtype = jnp.dtype(dtype) if dtype is not None else jnp.float32
+    dx, dy, dz = tile
+    X, Y, Z, c = g.shape
+    if X % dx or Y % dy or Z % dz:
+        raise ValueError(f"cotangent shape {g.shape} not a multiple of {tile}")
+    num_ctrl = (X // dx + 3, Y // dy + 3, Z // dz + 3)
+    if block_ctrl is None:
+        block_ctrl = pick_block_ctrl(num_ctrl, tile, c, g.dtype.itemsize)
+    block_ctrl = tuple(min(b, n) for b, n in zip(block_ctrl, num_ctrl))
+    # pad: 3 zero tiles per side (uniform windows) + control count up to a
+    # block multiple (the extra rows are cropped from the output).
+    pads = [(3 * d, (3 + (-n) % b) * d)
+            for n, b, d in zip(num_ctrl, block_ctrl, tile)]
+    gp = jnp.pad(g, pads + [(0, 0)])
+    luts = tuple(weight_lut(d, jnp.float32) for d in tile)
+
+    nz_pad = gp.shape[2] // dz - 3  # padded control count along z
+    # budget read at trace time (not def time) so tests can patch it
+    chunk = _pick_z_chunk(gp.shape, nz_pad, block_ctrl[2], gp.dtype.itemsize,
+                          budget=_VMEM_BUDGET_BYTES)
+    outs = []
+    for k0 in range(0, nz_pad, chunk):
+        k1 = min(k0 + chunk, nz_pad)
+        slab = gp[:, :, k0 * dz : (k1 + 3) * dz]
+        outs.append(bsi_adjoint_separable_pallas(
+            slab, *luts, tile=tile, block_ctrl=block_ctrl,
+            out_dtype=out_dtype, interpret=interpret))
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
+    return out[: num_ctrl[0], : num_ctrl[1], : num_ctrl[2]]
+
+
+def _pick_z_chunk(gp_shape, nz_pad, bz, itemsize, budget=_VMEM_BUDGET_BYTES):
+    """Largest ``bz``-multiple z-chunk whose cotangent slab fits the budget.
+
+    Each chunk of ``K`` control points re-reads a ``(K+3)``-tile slab — the
+    3-tile halo is the chunk-level instance of the forward's Eq. A.4 overlap.
+    Chunks never go below one block; a single minimal block that still
+    exceeds the budget runs anyway (interpret mode tolerates it; on real
+    hardware that is the signal to shrink ``block_ctrl``).
+    """
+    plane = gp_shape[0] * gp_shape[1] * gp_shape[3] * itemsize
+    dz = gp_shape[2] // (nz_pad + 3)
+    chunk = nz_pad
+    while chunk > bz and (chunk + 3) * dz * plane > budget // 2:
+        chunk = max(bz, (chunk // 2 // bz) * bz)
+    return chunk

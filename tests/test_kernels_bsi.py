@@ -93,6 +93,22 @@ def test_pick_block_tiles_respects_budget():
     assert out_bytes < 1 * 2**20
 
 
+def test_pick_block_tiles_clamps_to_tiny_grids():
+    """num_tiles is honoured: a grid smaller than the default block must not
+    budget for (and pad up to) blocks larger than the whole grid."""
+    assert ops.pick_block_tiles((2, 1, 3), (5, 5, 5), 3, 4) == (2, 1, 3)
+    # clamping also frees budget: a tiny grid keeps its axes un-halved even
+    # under a budget that would shrink the default 4^3 block
+    bt = ops.pick_block_tiles((1, 1, 64), (7, 7, 7), 3, 4, budget=2**20)
+    assert bt[0] == 1 and bt[1] == 1
+    # and the padded kernel path agrees with the oracle on such grids
+    rng = np.random.default_rng(11)
+    phi = jnp.asarray(rng.standard_normal((5, 4, 6, 3)), jnp.float32)
+    out = ops.bsi_pallas(phi, (4, 4, 4), mode="separable")
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(bsi_ref(phi, (4, 4, 4))), atol=3e-6)
+
+
 def test_op_count_model():
     """Paper App. B: 255 ops/voxel (TT) vs 126 (TTLI) vs separable.
 

@@ -87,6 +87,33 @@ def test_locality(seed):
         assert coords.max() < 5 * d
 
 
+@given(
+    tiles=st.tuples(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4)),
+    d=st.integers(2, 6),
+    grad_impl=st.sampled_from(["jnp", "pallas"]),
+    seed=st.integers(0, 2**16),
+)
+@settings(**COMMON)
+def test_adjoint_dot_product_identity(tiles, d, grad_impl, seed):
+    """Transpose correctness: <S p, g> == <p, S^T g> for the analytic
+    adjoint of the BSI linear map S (both implementations)."""
+    from repro.core.interpolate import bsi_adjoint
+
+    rng = np.random.default_rng(seed)
+    grid = tuple(t + 3 for t in tiles)
+    dense = tuple(t * d for t in tiles)
+    p = jnp.asarray(rng.standard_normal(grid + (2,)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal(dense + (2,)), jnp.float32)
+    sp = bsi_ref(p, (d, d, d))
+    lhs = float(jnp.vdot(sp, g))
+    rhs = float(jnp.vdot(p, bsi_adjoint(g, (d, d, d), impl=grad_impl)))
+    # normalise by the Cauchy-Schwarz scale of the inner product, not by the
+    # (possibly near-cancelling) value itself — f32 accumulation error grows
+    # with the number of summed terms, the dot value does not
+    scale = max(1.0, float(jnp.linalg.norm(sp)) * float(jnp.linalg.norm(g)))
+    assert abs(lhs - rhs) / scale < 1e-5
+
+
 @given(seed=st.integers(0, 2**16), d=st.integers(2, 5))
 @settings(**COMMON)
 def test_translation_equivariance(seed, d):
