@@ -20,6 +20,15 @@ asks for).  On a 1-device CPU host it re-executes itself with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the curve exists
 on laptops and in CI; on real accelerators it uses the devices as-is.
 
+``--earlystop`` reports the convergence-aware serving rows (Budelmann et
+al.'s stop-on-plateau, ``repro.engine.convergence``): a mixed easy/hard
+batch and an all-easy batch, each registered with fixed ``iters`` and with
+``stop=ConvergenceConfig(...)`` — steps saved, final-loss excess vs the
+fixed run, and pairs/sec.  All timings are warm (compile-cached) runs; the
+mixed batch shows the per-lane step savings at matched quality, the
+all-easy batch the wall-clock win when every lane converges early and the
+batched ``while_loop`` exits.
+
 CSV: name,us_per_call,derived.
 """
 from __future__ import annotations
@@ -133,6 +142,70 @@ def run(shape=(48, 40, 36), iters=25, affine_iters=30, multimodal=True):
     return rows
 
 
+def run_earlystop(shape=(22, 20, 18), iters=24, batch=4, lr=0.1,
+                  tol=3e-4, patience=8):
+    """Early-stop rows: fixed-``iters`` vs ``stop=ConvergenceConfig(...)``.
+
+    Two batches at a serving-friendly learning rate (descent is monotone,
+    so the plateau rule is meaningful): ``mixed`` alternates nearly-aligned
+    (magnitude 0.3) and hard (2.5) pairs — easy lanes freeze early at
+    equal-or-better loss while hard lanes keep their full budget; ``easy``
+    is all nearly-aligned pairs — every lane converges early, the
+    ``while_loop`` exits, and the whole batch gets the wall-clock win.
+    Each arm is timed on a warm (compile-cached) second call, so the rows
+    never see a compile spike (``BatchRegistrationResult.compiled``).
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.engine import ConvergenceConfig, register_batch
+
+    kw = dict(tile=TILE, levels=2, iters=iters, lr=lr,
+              mode="separable", impl="jnp")
+    stop = ConvergenceConfig(tol=tol, patience=patience)
+    budget = 2 * iters  # Adam steps per pair under fixed iters (2 levels)
+
+    def warm(F, M, reps=5, **extra):
+        register_batch(F, M, **kw, **extra)  # compile on miss
+        times = []
+        for _ in range(reps):
+            res = register_batch(F, M, **kw, **extra)
+            assert not res.compiled, "warm call must hit the program cache"
+            times.append(res.seconds)
+        res.seconds = float(np.median(times))  # de-noise the gated timing
+        return res
+
+    rows = []
+    for name, mags in (("mixed", [(0.3, 2.5)[s % 2] for s in range(batch)]),
+                       ("easy", [0.3 + 0.05 * (s % 2) for s in range(batch)])):
+        pairs = [make_pair(shape=shape, tile=TILE, magnitude=m, seed=s)
+                 for s, m in enumerate(mags)]
+        F = jnp.stack([p[0] for p in pairs])
+        M = jnp.stack([p[1] for p in pairs])
+        fixed = warm(F, M)
+        es = warm(F, M, stop=stop)
+        steps = np.asarray(es.steps)
+        saved = 1.0 - steps.sum() / (len(mags) * budget)
+        # worst-lane final-loss excess vs the fixed-iters run (acceptance:
+        # within 2%; negative = the early-stopped run ended better)
+        excess = float((np.asarray(es.losses[:, -1])
+                        / np.asarray(fixed.losses[:, -1]) - 1).max())
+        rows += [
+            (f"registration/earlystop/{name}_fixed",
+             round(fixed.seconds * 1e6, 0),
+             f"pairs_per_s={len(mags) / fixed.seconds:.2f}"
+             f"|steps_per_pair={budget}"),
+            (f"registration/earlystop/{name}_adaptive",
+             round(es.seconds * 1e6, 0),
+             f"pairs_per_s={len(mags) / es.seconds:.2f}"
+             f"|steps_saved={saved:.0%}"
+             f"|mean_steps={steps.sum(axis=1).mean():.1f}"
+             f"|max_loss_excess={excess:+.1%}"
+             f"|speedup=x{fixed.seconds / es.seconds:.2f}"),
+        ]
+    return rows
+
+
 def run_sharded(shape=(24, 20, 18), iters=6, batch=8, device_counts=None):
     """Pairs/sec vs device count: ``register_batch(..., mesh=...)`` scaling.
 
@@ -171,8 +244,13 @@ def run_sharded(shape=(24, 20, 18), iters=6, batch=8, device_counts=None):
     return rows
 
 
-def main(sharded=False, **kwargs):
-    rows = run_sharded(**kwargs) if sharded else run(**kwargs)
+def main(sharded=False, earlystop=False, **kwargs):
+    if sharded:
+        rows = run_sharded(**kwargs)
+    elif earlystop:
+        rows = run_earlystop(**kwargs)
+    else:
+        rows = run(**kwargs)
     return emit(rows, ["name", "us_per_call", "derived"])
 
 
@@ -185,12 +263,16 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--sharded", action="store_true",
                     help="pairs/sec vs device count via register_batch(mesh=)")
+    ap.add_argument("--earlystop", action="store_true",
+                    help="fixed-iters vs stop=ConvergenceConfig rows "
+                         "(steps saved + loss excess on mixed/easy batches)")
     # None -> each path keeps its own defaults (run(): the paper-analogue
-    # (48, 40, 36) x 25 iters; run_sharded(): a CPU-budget (24, 20, 18) x 6)
+    # (48, 40, 36) x 25 iters; run_sharded(): a CPU-budget (24, 20, 18) x 6;
+    # run_earlystop(): (22, 20, 18) x 24)
     ap.add_argument("--shape", type=int, nargs=3, default=None)
     ap.add_argument("--iters", type=int, default=None)
-    ap.add_argument("--batch", type=int, default=8,
-                    help="batch size for --sharded")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="batch size for --sharded / --earlystop")
     args = ap.parse_args()
 
     kwargs = {}
@@ -199,7 +281,11 @@ if __name__ == "__main__":
     if args.iters is not None:
         kwargs["iters"] = args.iters
 
-    if args.sharded:
+    if args.earlystop:
+        main(earlystop=True,
+             **({"batch": args.batch} if args.batch is not None else {}),
+             **kwargs)
+    elif args.sharded:
         import jax
 
         flags = os.environ.get("XLA_FLAGS", "")
@@ -212,6 +298,6 @@ if __name__ == "__main__":
                 flags + " --xla_force_host_platform_device_count=8").strip()
             sys.exit(subprocess.call([sys.executable, __file__]
                                      + sys.argv[1:], env=env))
-        main(sharded=True, batch=args.batch, **kwargs)
+        main(sharded=True, batch=args.batch or 8, **kwargs)
     else:
         main(**kwargs)

@@ -53,6 +53,10 @@ def _suites(preset):
                 volumes=tuple(TINY_VOLUMES))),
             ("registration_bench", lambda: registration_bench.main(
                 shape=(22, 20, 18), iters=4, affine_iters=10)),
+            # convergence-aware serving: steps saved + loss excess of
+            # stop=ConvergenceConfig vs fixed iters (ISSUE 5 acceptance)
+            ("registration_earlystop", lambda: registration_bench.main(
+                earlystop=True, shape=(22, 20, 18), iters=24, batch=4)),
         ]
     full = preset == "full"
     return [

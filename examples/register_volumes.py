@@ -12,8 +12,14 @@ registers N pairs in one jitted program via ``repro.engine.register_batch``.
 remap to the moving volume first — the synthetic CT↔CBCT case where SSD
 fails and ``--similarity nmi`` recovers the warp.
 
+``--early-stop [TOL]`` swaps the fixed-``--iters`` loops for the
+convergence-aware ``lax.while_loop`` (``repro.engine.convergence``): each
+pyramid level stops when the loss plateaus and the report shows the Adam
+steps actually run.
+
     python examples/register_volumes.py [--mode auto] [--batch 4]
     python examples/register_volumes.py --multimodal --similarity nmi
+    python examples/register_volumes.py --early-stop 1e-4 --batch 4
 """
 import argparse
 import sys
@@ -29,7 +35,7 @@ from repro.core import ffd, metrics
 from repro.core.registration import affine_register, ffd_register
 from repro.core.similarity import available_similarities
 from repro.data.volumes import make_pair
-from repro.engine import register_batch, resolve_bsi
+from repro.engine import ConvergenceConfig, register_batch, resolve_bsi
 
 
 def main():
@@ -54,7 +60,24 @@ def main():
                     help="monotone-remap the moving volume's intensities "
                          "first (synthetic cross-modality pair; use "
                          "--similarity nmi)")
+    ap.add_argument("--early-stop", type=float, nargs="?", const=1e-4,
+                    default=None, metavar="TOL",
+                    help="stop each pyramid level when the loss plateaus "
+                         "(relative improvement < TOL for a patience "
+                         "window) instead of always running --iters steps "
+                         "(repro.engine.convergence.ConvergenceConfig)")
+    ap.add_argument("--lr", type=float, default=None,
+                    help="Adam learning rate (default: the engine's 0.5, "
+                         "or 0.12 with --early-stop — the plateau rule "
+                         "wants an lr at which the loss actually descends, "
+                         "and 0.5 overshoots for the first ~15 steps at "
+                         "this scale)")
     args = ap.parse_args()
+    if args.lr is None:
+        args.lr = 0.12 if args.early_stop is not None else 0.5
+        if args.early_stop is not None:
+            print(f"--early-stop: using lr={args.lr} (pass --lr to "
+                  "override); see README 'Early stopping'")
     if args.mesh and not args.batch:
         ap.error("--mesh shards the batched path; pass --batch N with it")
 
@@ -86,13 +109,18 @@ def main():
               f"mae={float(metrics.mae(aff.warped, fixed)):.4f} "
               f"ssim={float(metrics.ssim(aff.warped, fixed)):.4f}")
 
+    stop = (ConvergenceConfig(tol=args.early_stop)
+            if args.early_stop is not None else None)
     res = ffd_register(fixed, moving, tile=tile, levels=2,
-                       iters=args.iters, mode=mode, impl=impl,
-                       similarity=args.similarity, measure_bsi_time=True)
+                       iters=args.iters, lr=args.lr, mode=mode, impl=impl,
+                       similarity=args.similarity, stop=stop,
+                       measure_bsi_time=True)
     disp = ffd.dense_field(res.params, tile, shape, mode=mode, impl=impl)
     recovered = ffd.warp_volume(source, disp)
+    steps_note = ("" if res.steps is None else
+                  f", steps/level {res.steps} of {args.iters}")
     print(f"ffd/{mode:9s} ({res.seconds:5.1f}s, "
-          f"~{res.bsi_seconds:.1f}s in BSI): "
+          f"~{res.bsi_seconds:.1f}s in BSI{steps_note}): "
           f"mae={float(metrics.mae(recovered, fixed)):.4f} "
           f"ssim={float(metrics.ssim(recovered, fixed)):.4f}")
 
@@ -116,19 +144,25 @@ def main():
         if args.multimodal:
             M = (1.0 - M) ** 1.5  # same monotone remap as the single pair
         batch = register_batch(F, M, tile=tile, levels=2, iters=args.iters,
-                               mode=mode, impl=impl,
-                               similarity=args.similarity, mesh=mesh)
+                               lr=args.lr, mode=mode, impl=impl,
+                               similarity=args.similarity, mesh=mesh,
+                               stop=stop)
         cold = batch.seconds  # includes the one-time compile
         t0 = time.perf_counter()
         batch = register_batch(F, M, tile=tile, levels=2, iters=args.iters,
-                               mode=mode, impl=impl,
-                               similarity=args.similarity, mesh=mesh)
+                               lr=args.lr, mode=mode, impl=impl,
+                               similarity=args.similarity, mesh=mesh,
+                               stop=stop)
         warm = time.perf_counter() - t0
         disp0 = ffd.dense_field(batch.params[0], tile, shape,
                                 mode=mode, impl=impl)
         mae = float(metrics.mae(ffd.warp_volume(sources[0], disp0), F[0]))
+        steps_note = ("" if batch.steps is None else
+                      f", steps {batch.steps.sum(axis=1).tolist()}"
+                      f" of {2 * args.iters}")
         print(f"{label} (cold {cold:5.1f}s, warm {warm:5.2f}s"
-              f" = {warm / args.batch:5.2f}s/pair): mae[0]={mae:.4f}")
+              f" = {warm / args.batch:5.2f}s/pair{steps_note}): "
+              f"mae[0]={mae:.4f}")
 
 
 if __name__ == "__main__":

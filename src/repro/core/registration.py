@@ -34,6 +34,7 @@ from repro.core.ffd import downsample2  # re-exported (seed API)
 from repro.core.similarity import resolve_similarity
 from repro.engine.autotune import resolve_bsi
 from repro.engine.batch import ffd_level_loss
+from repro.engine.convergence import check_stop
 from repro.engine.loop import make_adam_runner
 
 __all__ = ["RegistrationResult", "affine_register", "ffd_register", "downsample2"]
@@ -46,6 +47,7 @@ class RegistrationResult:
     losses: list             # loss trace
     seconds: float           # wall time
     bsi_seconds: float = 0.0 # time inside BSI (paper Figs. 8-9 breakdown)
+    steps: Any = None        # Adam steps per level when stop= was set
 
 
 def _affine_ident_centre(vol_shape):
@@ -71,7 +73,7 @@ def _affine_warp(theta, moving, vol_shape):
 
 
 @functools.lru_cache(maxsize=32)
-def _affine_runner(vol_shape, iters, lr, similarity):
+def _affine_runner(vol_shape, iters, lr, similarity, stop=None):
     _, sim = resolve_similarity(similarity)
 
     def loss_builder(f, mov):
@@ -80,36 +82,47 @@ def _affine_runner(vol_shape, iters, lr, similarity):
 
         return loss_fn
 
-    return make_adam_runner(loss_builder, iters=iters, lr=lr)
+    return make_adam_runner(loss_builder, iters=iters, lr=lr, stop=stop)
 
 
-def affine_register(fixed, moving, *, iters=60, lr=0.02, similarity="ssd"):
+def affine_register(fixed, moving, *, iters=60, lr=0.02, similarity="ssd",
+                    stop=None):
     """Optimise a 3x4 affine (around the volume centre) on ``similarity``.
 
     The whole optimisation is one scan-compiled program; the runner is
-    cached by (shape, iters, lr, similarity), so repeat calls skip
+    cached by (shape, iters, lr, similarity, stop), so repeat calls skip
     compilation.  ``similarity`` is a registered name (``"ssd" | "ncc" |
-    "lncc" | "nmi"``) or a loss callable (lower = better).
+    "lncc" | "nmi"``) or a loss callable (lower = better).  ``stop`` (a
+    ``ConvergenceConfig``) runs the loop as an early-stopped
+    ``lax.while_loop`` instead — the result's ``steps`` records the Adam
+    steps actually taken (``stop.max_iters`` defaults to ``iters``).
     """
     fixed = jnp.asarray(fixed, jnp.float32)
     moving = jnp.asarray(moving, jnp.float32)
     sim_key, _ = resolve_similarity(similarity)
+    stop = check_stop(stop, iters)
     t0 = time.perf_counter()
-    runner = _affine_runner(fixed.shape, int(iters), float(lr), sim_key)
+    runner = _affine_runner(fixed.shape, int(iters), float(lr), sim_key,
+                            stop)
     theta0 = jnp.zeros((3, 4), jnp.float32)
-    theta, trace = runner(theta0, jnp.zeros_like(theta0),
-                          jnp.zeros_like(theta0), fixed, moving)
+    out = runner(theta0, jnp.zeros_like(theta0), jnp.zeros_like(theta0),
+                 fixed, moving)
+    theta, trace = out[:2]
+    steps = [int(out[2])] if stop is not None else None
     # same sampling points as the seed's Python loop: every 10th + last
-    marks = sorted(set(range(10, iters + 1, 10)) | {iters})
+    # (the early-stopped trace is padded with its final loss past the stop)
+    span = iters if stop is None else stop.max_iters
+    marks = sorted(set(range(10, span + 1, 10)) | {span})
     losses = [float(trace[i - 1]) for i in marks]
     warped = _affine_warp(theta, moving, fixed.shape)
     jax.block_until_ready(warped)
-    return RegistrationResult(warped, theta, losses, time.perf_counter() - t0)
+    return RegistrationResult(warped, theta, losses,
+                              time.perf_counter() - t0, steps=steps)
 
 
 @functools.lru_cache(maxsize=64)  # bounded: ~levels x configs in flight
 def _ffd_level_runner(vol_shape, tile, iters, lr, bending_weight, mode, impl,
-                      grad_impl, compute_dtype, similarity):
+                      grad_impl, compute_dtype, similarity, stop=None):
     del vol_shape  # cache key only; shapes re-trace via jit
 
     def loss_builder(f, mov):
@@ -119,7 +132,7 @@ def _ffd_level_runner(vol_shape, tile, iters, lr, bending_weight, mode, impl,
                               compute_dtype=compute_dtype,
                               similarity=similarity)
 
-    return make_adam_runner(loss_builder, iters=iters, lr=lr)
+    return make_adam_runner(loss_builder, iters=iters, lr=lr, stop=stop)
 
 
 def ffd_register(
@@ -136,6 +149,7 @@ def ffd_register(
     grad_impl="auto",
     compute_dtype=None,
     similarity="ssd",
+    stop=None,
     measure_bsi_time=False,
 ):
     """Multi-resolution FFD registration (NiftyReg workflow, paper §6).
@@ -152,7 +166,11 @@ def ffd_register(
     precision with fp32 params and adjoint accumulation.  ``similarity`` is a
     registered name (``"ssd" | "ncc" | "lncc" | "nmi"`` — NMI being the
     multi-modal NiftyReg path) or a ``(warped, fixed) -> scalar`` loss
-    callable (lower = better; see ``repro.core.similarity``).
+    callable (lower = better; see ``repro.core.similarity``).  ``stop`` (a
+    ``ConvergenceConfig``, see ``repro.engine.convergence``) replaces each
+    level's fixed-``iters`` scan with an early-stopped ``lax.while_loop``
+    (``stop.max_iters`` defaults to ``iters``); the result's ``steps`` then
+    lists the Adam steps each level actually ran.
     """
     fixed = jnp.asarray(fixed, jnp.float32)
     moving = jnp.asarray(moving, jnp.float32)
@@ -160,6 +178,7 @@ def ffd_register(
     sim_key, _ = resolve_similarity(similarity)
     compute_dtype = (jnp.dtype(compute_dtype).name
                      if compute_dtype is not None else None)
+    stop = check_stop(stop, iters)
     mode, impl, grad_impl = resolve_bsi(
         mode, impl, ffd.grid_shape_for_volume(fixed.shape, tile), tile,
         grad_impl=grad_impl,  # the adjoint axis is tuned jointly
@@ -176,6 +195,7 @@ def ffd_register(
     bsi_fn = functools.partial(ffd.dense_field, mode=mode, impl=impl)
     phi = None
     losses = []
+    steps = [] if stop is not None else None
     bsi_seconds = 0.0
     t0 = time.perf_counter()
 
@@ -188,9 +208,11 @@ def ffd_register(
 
         runner = _ffd_level_runner(f.shape, tile, int(iters), float(lr),
                                    float(bending_weight), mode, impl,
-                                   grad_impl, compute_dtype, sim_key)
-        phi, trace = runner(phi, jnp.zeros_like(phi), jnp.zeros_like(phi),
-                            f, m)
+                                   grad_impl, compute_dtype, sim_key, stop)
+        out = runner(phi, jnp.zeros_like(phi), jnp.zeros_like(phi), f, m)
+        phi, trace = out[:2]
+        if stop is not None:
+            steps.append(int(out[2]))
         phi.block_until_ready()
         losses.append(float(trace[-1]))
 
@@ -202,11 +224,14 @@ def ffd_register(
             t1 = time.perf_counter()
             for _ in range(reps):
                 dense(phi).block_until_ready()
-            # 2 BSI evaluations per optimisation step (forward + grad).
-            bsi_seconds = (time.perf_counter() - t1) / reps * iters * 2
+            # 2 BSI evaluations per optimisation step (forward + grad),
+            # scaled by the steps this level actually ran.
+            ran = steps[-1] if stop is not None else iters
+            bsi_seconds = (time.perf_counter() - t1) / reps * ran * 2
 
     disp = bsi_fn(phi, tile, fixed.shape)
     warped = ffd.warp_volume(moving, disp)
     return RegistrationResult(
-        warped, phi, losses, time.perf_counter() - t0, bsi_seconds
+        warped, phi, losses, time.perf_counter() - t0, bsi_seconds,
+        steps=steps
     )

@@ -4,15 +4,18 @@ The workload-scale layer over ``repro.core``: scan-compiled optimisation
 loops (``engine.loop``), whole-pipeline batching via ``vmap`` so N volume
 pairs register in one jitted program (``engine.batch.register_batch``), a
 benchmark-and-cache autotuner that picks the fastest BSI form per
-configuration instead of hardcoded defaults (``engine.autotune``), and
+configuration instead of hardcoded defaults (``engine.autotune``),
 mesh-sharded data-parallel serving that places the batch axis over a device
-pod (``engine.shard``, via ``register_batch(..., mesh=...)``).
+pod (``engine.shard``, via ``register_batch(..., mesh=...)``), and
+convergence-aware early stopping so easy pairs stop paying for BSI work
+they no longer need (``engine.convergence``, via ``stop=``).
 """
 from repro.engine.autotune import (BsiChoice, autotune_bsi,
                                    default_candidates, default_grad_impls,
                                    resolve_bsi)
 from repro.engine.batch import (BatchRegistrationResult, ffd_pipeline,
                                 register_batch)
+from repro.engine.convergence import ConvergenceConfig, adam_until
 from repro.engine.loop import adam_scan, make_adam_runner
 from repro.engine.shard import make_registration_mesh, sharded_pipeline
 
@@ -25,6 +28,8 @@ __all__ = [
     "BatchRegistrationResult",
     "ffd_pipeline",
     "register_batch",
+    "ConvergenceConfig",
+    "adam_until",
     "adam_scan",
     "make_adam_runner",
     "make_registration_mesh",

@@ -128,7 +128,7 @@ def _store_disk(path, key, choice) -> None:
 def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
                  cache_path=None, use_cache=True, measure_grad=False,
                  similarity=None, grad_impls=None,
-                 compute_dtype=None) -> BsiChoice:
+                 compute_dtype=None, stop=None) -> BsiChoice:
     """Benchmark the candidate BSI forms and return (and cache) the winner.
 
     Args:
@@ -159,7 +159,18 @@ def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
         dtype — what the registration loop will actually execute — and the
         cache entry is per-dtype, so fp32 and bf16 callers never share a
         possibly-differently-ranked winner.
+      stop: must stay ``None``.  The timing workload is one fixed
+        forward+backward step — early stopping (``ConvergenceConfig``)
+        changes how *many* steps a given pair runs, never the per-step cost
+        a kernel choice should be ranked on, and a data-dependent loop
+        length would make the measurement (and its cache entry) depend on
+        the synthetic pair's convergence.  Engine callers resolve ``stop``
+        outside the tuner; passing it here is a usage error.
     """
+    if stop is not None:
+        raise ValueError(
+            "autotune_bsi times a fixed-iteration workload; stop= must be "
+            "None (early stopping changes step count, not per-step cost)")
     grid_shape = tuple(int(g) for g in grid_shape)
     tile = tuple(int(t) for t in tile)
     channels = int(channels)

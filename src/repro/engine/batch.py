@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import ffd
 from repro.core.similarity import resolve_similarity
+from repro.engine.convergence import adam_until, check_stop
 from repro.engine.loop import adam_scan
 
 __all__ = ["BatchRegistrationResult", "ffd_level_loss", "ffd_pipeline",
@@ -34,7 +35,14 @@ class BatchRegistrationResult:
     warped: Any     # (B, X, Y, Z) registered moving volumes
     params: Any     # (B, *grid_shape, 3) finest-level control grids
     losses: Any     # (B, levels) final loss per pyramid level
-    seconds: float  # wall time for the whole batch (incl. compile on miss)
+    seconds: float  # wall time for the whole batch (see ``compiled``)
+    # True when this call (re)compiled the batch program: ``seconds`` then
+    # includes the one-time trace+compile and is NOT a steady-state batch
+    # time — time a second call (or check this flag) before comparing.
+    compiled: bool = False
+    # (B, levels) int32 Adam steps actually run per pair per level when the
+    # call used early stopping (``stop=``); None under fixed-``iters``.
+    steps: Any = None
 
 
 def ffd_level_loss(f, mov, *, tile, bending_weight, mode, impl,
@@ -58,20 +66,29 @@ def ffd_level_loss(f, mov, *, tile, bending_weight, mode, impl,
                                grad_impl=grad_impl,
                                compute_dtype=compute_dtype)
         warped = ffd.warp_volume(mov, disp, compute_dtype=compute_dtype)
-        warped = warped.astype(f.dtype)  # score the objective in fp32
-        return sim(warped, f) + bending_weight * ffd.bending_energy(p)
+        # score the objective in fp32 regardless of input dtype: casting to
+        # f.dtype would silently score a bf16 fixed volume (similarity AND
+        # its trade-off against the fp32 bending term) in bf16
+        warped = warped.astype(jnp.float32)
+        fixed32 = f.astype(jnp.float32)
+        return sim(warped, fixed32) + bending_weight * ffd.bending_energy(p)
 
     return loss_fn
 
 
 def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
                  mode, impl, grad_impl="xla", compute_dtype=None,
-                 similarity="ssd"):
+                 similarity="ssd", stop=None):
     """Pure multi-level FFD registration of ONE ``(fixed, moving)`` pair.
 
     Traceable end-to-end (no timing, no host sync): the levels unroll into
-    the trace and each level's inner loop is a ``lax.scan``.  Returns
-    ``(warped, phi, level_losses)``.
+    the trace and each level's inner loop is a ``lax.scan`` — or, with a
+    resolved ``ConvergenceConfig`` as ``stop``, the early-stopped
+    ``lax.while_loop`` (``engine.convergence.adam_until``), under which
+    ``vmap``ped lanes freeze as they converge and the level exits when the
+    last lane is done.  Returns ``(warped, phi, level_losses)``; with
+    ``stop`` set, ``(warped, phi, level_losses, level_steps)`` where
+    ``level_steps[l]`` is the Adam steps level ``l`` actually ran.
     """
     pyramid = [(fixed, moving)]
     for _ in range(levels - 1):
@@ -81,6 +98,7 @@ def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
 
     phi = None
     finals = []
+    steps = []
     for f, m in pyramid:
         gshape = ffd.grid_shape_for_volume(f.shape, tile)
         phi = (jnp.zeros(gshape + (3,), jnp.float32) if phi is None
@@ -90,23 +108,32 @@ def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
                                  mode=mode, impl=impl, grad_impl=grad_impl,
                                  compute_dtype=compute_dtype,
                                  similarity=similarity)
-        phi, trace = adam_scan(loss_fn, phi, iters=iters, lr=lr)
+        if stop is None:
+            phi, trace = adam_scan(loss_fn, phi, iters=iters, lr=lr)
+        else:
+            phi, trace, taken = adam_until(loss_fn, phi, stop=stop, lr=lr)
+            steps.append(taken)
         finals.append(trace[-1])
 
     disp = ffd.dense_field(phi, tile, fixed.shape, mode=mode, impl=impl,
                            grad_impl=grad_impl)
     warped = ffd.warp_volume(moving, disp)
-    return warped, phi, jnp.stack(finals)
+    if stop is None:
+        return warped, phi, jnp.stack(finals)
+    return warped, phi, jnp.stack(finals), jnp.stack(steps)
 
 
 @functools.lru_cache(maxsize=32)
 def _compiled_batch(vol_shape, tile, levels, iters, lr, bending_weight,
                     mode, impl, grad_impl, compute_dtype, similarity,
-                    mesh=None):
+                    mesh=None, stop=None):
     """One compiled program per (configuration, mesh) — ``mesh`` is part of
     the cache key (``jax.sharding.Mesh`` hashes by devices + axis names), so
     single-device and pod-sharded callers never collide, and two meshes over
-    the same devices share a compile."""
+    the same devices share a compile.  ``stop`` (a frozen, hashable
+    ``ConvergenceConfig`` or None) is part of the key too: the early-stopped
+    while-loop program and the fixed-length scan program are different
+    programs."""
     del vol_shape  # cache key only; jax re-traces on new shapes anyway
     if mesh is not None:
         from repro.engine.shard import compile_sharded_batch
@@ -114,14 +141,14 @@ def _compiled_batch(vol_shape, tile, levels, iters, lr, bending_weight,
         return compile_sharded_batch(mesh, tile, levels, iters, lr,
                                      bending_weight, mode, impl, similarity,
                                      grad_impl=grad_impl,
-                                     compute_dtype=compute_dtype)
+                                     compute_dtype=compute_dtype, stop=stop)
 
     def single(f, m):
         return ffd_pipeline(f, m, tile=tile, levels=levels, iters=iters,
                             lr=lr, bending_weight=bending_weight,
                             mode=mode, impl=impl, grad_impl=grad_impl,
                             compute_dtype=compute_dtype,
-                            similarity=similarity)
+                            similarity=similarity, stop=stop)
 
     return jax.jit(jax.vmap(single))
 
@@ -129,7 +156,7 @@ def _compiled_batch(vol_shape, tile, levels, iters, lr, bending_weight,
 def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
                    lr=0.5, bending_weight=5e-3, mode="auto", impl="auto",
                    grad_impl="auto", compute_dtype=None, similarity="ssd",
-                   mesh=None):
+                   mesh=None, stop=None):
     """Register a batch of volume pairs in a single jitted program.
 
     Args:
@@ -149,6 +176,19 @@ def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
         serving all devices.  Non-divisible batches are padded (repeating
         the last pair) and stripped on return, so results are identical to
         the unsharded path for any B.
+      stop: optional ``ConvergenceConfig`` — run each pyramid level as an
+        early-stopped ``lax.while_loop`` instead of a fixed-``iters`` scan
+        (``stop.max_iters`` defaults to ``iters``).  Converged pairs (and
+        ``pad_batch`` filler lanes) freeze — their updates are masked and
+        their best-visited params are returned — and the level exits as
+        soon as the *last* lane converges, so a batch of easy pairs
+        finishes in a fraction of the budget.  Note the SPMD cost model:
+        until that exit, frozen lanes still execute the (masked) BSI work,
+        so a mixed batch's wall-clock is set by its slowest pair — the
+        ``steps`` array the result gains counts optimiser steps per pair
+        (quality/accounting), not wall-clock saved.  ``stop=None``
+        (default) is the fixed-iteration pipeline, bit-identical to not
+        passing ``stop``.
 
     Returns a :class:`BatchRegistrationResult`; ``warped[b]`` matches what
     per-pair ``ffd_register`` produces for pair ``b``.
@@ -159,15 +199,24 @@ def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
         raise ValueError(
             f"register_batch expects (B, X, Y, Z) stacks, got {fixed.shape}; "
             "use ffd_register for a single pair")
+    if fixed.shape[0] == 0:
+        raise ValueError(
+            "register_batch got an empty batch (B=0); supply at least one "
+            "(fixed, moving) pair")
     if fixed.shape != moving.shape:
         raise ValueError(f"shape mismatch: {fixed.shape} vs {moving.shape}")
     tile = tuple(int(t) for t in tile)
     sim_key, _ = resolve_similarity(similarity)
     compute_dtype = (jnp.dtype(compute_dtype).name
                      if compute_dtype is not None else None)
+    stop = check_stop(stop, iters)
 
     from repro.engine.autotune import resolve_bsi
 
+    # NOTE: the autotune workload pins stop=None — the winner is measured on
+    # the fixed-iteration forward+backward BSI step, which is exactly the
+    # per-step work an early-stopped loop runs (stopping changes how many
+    # steps execute, never which kernel each step should use).
     mode, impl, grad_impl = resolve_bsi(
         mode, impl, ffd.grid_shape_for_volume(fixed.shape[1:], tile), tile,
         grad_impl=grad_impl,  # the adjoint axis is tuned jointly
@@ -182,12 +231,18 @@ def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
 
         fixed, b = pad_batch(fixed, batch_multiple(mesh))
         moving, _ = pad_batch(moving, batch_multiple(mesh))
+    misses = _compiled_batch.cache_info().misses
     fn = _compiled_batch(fixed.shape[1:], tile, levels, iters, float(lr),
                          float(bending_weight), mode, impl, grad_impl,
-                         compute_dtype, sim_key, mesh)
-    warped, phi, losses = fn(fixed, moving)
+                         compute_dtype, sim_key, mesh, stop)
+    compiled = _compiled_batch.cache_info().misses > misses
+    out = fn(fixed, moving)
+    warped, phi, losses = out[:3]
+    steps = out[3] if stop is not None else None
     jax.block_until_ready(warped)
     seconds = time.perf_counter() - t0
     if mesh is not None:  # strip the pad rows (see engine.shard.pad_batch)
         warped, phi, losses = warped[:b], phi[:b], losses[:b]
-    return BatchRegistrationResult(warped, phi, losses, seconds)
+        steps = steps[:b] if steps is not None else None
+    return BatchRegistrationResult(warped, phi, losses, seconds,
+                                   compiled=compiled, steps=steps)

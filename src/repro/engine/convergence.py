@@ -1,0 +1,188 @@
+"""Convergence-aware optimisation: early-stopped ``lax.while_loop`` Adam.
+
+The fixed-``iters`` ``lax.scan`` loop (``engine.loop.adam_scan``) pays every
+pair the full BSI budget per pyramid level even after the objective has
+plateaued.  Budelmann et al. (PAPERS.md) hit their intra-operative wall-clock
+targets precisely by stopping each level when the objective stalls, and
+Brunn et al. show the win compounds across pyramid levels — this module is
+that stopping rule:
+
+* :class:`ConvergenceConfig` — the ``stop=`` knob threaded through
+  ``ffd_register`` / ``affine_register`` / ``register_batch`` (and the
+  sharded pipeline): stop a level when the relative loss improvement over a
+  ``patience`` window drops below ``tol``, or at ``max_iters``.
+* :func:`adam_until` — the ``lax.while_loop`` counterpart of ``adam_scan``:
+  same Adam arithmetic (shared :func:`adam_update` step), but the loop exits
+  as soon as the criterion fires, returning ``(params, trace, steps_taken)``
+  with the trace padded to the static ``max_iters`` shape so it stays
+  ``jit``/``vmap``-compatible.
+
+Batched masking comes for free: under ``jax.vmap`` a ``lax.while_loop`` runs
+until *every* lane's condition is false, applying each lane's body update
+through a per-lane select — converged lanes' carries (params, moments,
+trace) freeze at their own stopping point, so a batched lane finishes with
+exactly the params its solo run would have produced, and the program exits
+as soon as the slowest lane converges.  The wall-clock win is therefore
+batch-level: an all-easy (or padded-filler) batch finishes in a fraction of
+the budget, while a mixed batch is paced by its slowest pair (frozen lanes
+still execute masked BSI work until the exit — SPMD has no per-lane
+skipping).  Per-pair savings in full apply on the unbatched
+``ffd_register`` / ``affine_register`` path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ConvergenceConfig", "adam_update", "adam_until", "check_stop"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvergenceConfig:
+    """Early-stopping rule for a registration level's Adam loop.
+
+    Stop when the relative loss improvement over a ``patience`` window has
+    dropped below ``tol`` — concretely, when ``patience`` consecutive steps
+    have gone by without any of them beating the best loss seen so far by
+    more than ``tol`` (relative: ``(best - loss) / max(|best|, tiny)``) —
+    or unconditionally at ``max_iters``.  Tracking the best-so-far rather
+    than a fixed lookback makes the rule robust to Adam's transient loss
+    bumps: an oscillation only stops the loop if it lasts the whole window.
+
+    ``max_iters=None`` means "inherit the caller's ``iters``" — resolved via
+    :meth:`resolve` at the API boundary, so ``stop=ConvergenceConfig()``
+    keeps the familiar iteration budget as the ceiling.  Frozen (hashable) on
+    purpose: the config is part of every compiled-runner ``lru_cache`` key.
+    """
+
+    tol: float = 1e-4
+    patience: int = 5
+    max_iters: int | None = None
+
+    def __post_init__(self):
+        if self.tol < 0:
+            raise ValueError(f"tol must be >= 0, got {self.tol}")
+        if self.patience < 1:
+            raise ValueError(f"patience must be >= 1, got {self.patience}")
+        if self.max_iters is not None and self.max_iters < 1:
+            raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")
+
+    def resolve(self, iters) -> "ConvergenceConfig":
+        """A copy with a concrete ``max_iters`` (default: ``iters``)."""
+        mx = int(iters) if self.max_iters is None else int(self.max_iters)
+        return dataclasses.replace(self, tol=float(self.tol),
+                                   patience=int(self.patience), max_iters=mx)
+
+
+def check_stop(stop, iters):
+    """Validate and resolve a ``stop=`` argument (``None`` passes through).
+
+    The single gatekeeper for every ``stop=``-taking entry point
+    (``ffd_register`` / ``affine_register`` / ``register_batch`` /
+    ``make_adam_runner``): catches the natural mistake of passing the
+    tolerance directly (``stop=1e-4``) with a clear ``TypeError`` instead
+    of an ``AttributeError``, and pins ``max_iters`` to the caller's
+    ``iters`` when unset.
+    """
+    if stop is None:
+        return None
+    if not isinstance(stop, ConvergenceConfig):
+        raise TypeError(
+            f"stop must be a ConvergenceConfig or None, got {stop!r}; "
+            "e.g. stop=ConvergenceConfig(tol=1e-4)")
+    return stop.resolve(iters)
+
+
+def adam_update(p, m, v, g, i, *, lr, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam update (bias-corrected with step index ``i``, 1-based).
+
+    The single source of the update arithmetic — shared by the fixed-length
+    scan (``engine.loop.adam_scan``) and the early-stopped while loop
+    (:func:`adam_until`) so the two trajectories are step-for-step identical
+    until the stopping rule fires.
+    """
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1**i)
+    vh = v / (1 - b2**i)
+    return p - lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+
+def adam_until(loss_fn, params, *, stop, lr, b1=0.9, b2=0.999, eps=1e-8,
+               m=None, v=None):
+    """Adam as a ``lax.while_loop`` that exits when the loss plateaus.
+
+    The early-stopped counterpart of ``engine.loop.adam_scan``: same update
+    arithmetic (:func:`adam_update`), same trace convention (``trace[k]`` is
+    the loss after ``k+1`` updates), but the loop stops as soon as
+    ``stop.patience`` consecutive steps fail to improve the best loss by a
+    relative ``stop.tol`` — or at ``stop.max_iters``.
+
+    Returns ``(params, trace, steps_taken)``.  ``params`` are the
+    best-loss params visited (the start counts: a pair that the optimiser
+    can only make worse — e.g. an already-aligned pair, or a ``pad_batch``
+    filler lane — stops after ``patience`` steps and keeps its initial
+    params instead of the damage).  ``trace`` has the *static* shape
+    ``(stop.max_iters,)``: entries up to ``steps_taken`` are the per-step
+    losses, the rest are padded with the best (returned) loss, and
+    ``trace[-1]`` is always the loss of the returned params — also when the
+    budget runs out on a final step that was worse than the best — so the
+    result composes with ``jit`` / ``vmap`` / shape-based program caches
+    exactly like the fixed-length trace.  ``steps_taken`` is a traced ``int32``
+    scalar (per-lane under ``vmap``).
+
+    Under ``vmap``, lanes that converge first freeze (their whole carry is
+    select-masked by the batching rule) while the loop runs on for the
+    others; the batched program exits when the last lane is done.
+    """
+    if not isinstance(stop, ConvergenceConfig):
+        raise TypeError(f"stop must be a ConvergenceConfig, got {stop!r}")
+    if stop.max_iters is None:
+        raise ValueError(
+            "stop.max_iters is unresolved; call stop.resolve(iters) first")
+    max_iters = int(stop.max_iters)
+    patience = int(stop.patience)
+    tol = jnp.float32(stop.tol)
+    m = jnp.zeros_like(params) if m is None else m
+    v = jnp.zeros_like(params) if v is None else v
+
+    vg = jax.value_and_grad(loss_fn)
+    loss0, g0 = vg(params)  # gradient at the initial params seeds step 1
+
+    def cond(carry):
+        k = carry[0]
+        since = carry[6]
+        return jnp.logical_and(k < max_iters, since < patience)
+
+    def body(carry):
+        k, p, m, v, g, trace, since, best, best_p = carry
+        i = (k + 1).astype(jnp.float32)  # 1-based bias-correction index
+        p, m, v = adam_update(p, m, v, g, i, lr=lr, b1=b1, b2=b2, eps=eps)
+        loss, g = vg(p)  # the post-update loss closes slot k of the trace
+        trace = jax.lax.dynamic_update_index_in_dim(trace, loss, k, 0)
+        # a step "improves" when it beats the best loss so far by a relative
+        # tol; `since` counts consecutive non-improving steps, and the best
+        # params ride along so stopping never returns a worse point than
+        # the loop already visited
+        gain = (best - loss) / jnp.maximum(jnp.abs(best), jnp.float32(1e-12))
+        improved = gain > tol
+        best_p = jnp.where(improved, p, best_p)
+        best = jnp.where(improved, loss, best)
+        since = jnp.where(improved, 0, since + 1)
+        return k + 1, p, m, v, g, trace, since, best, best_p
+
+    carry = (jnp.zeros((), jnp.int32), params, m, v, g0,
+             jnp.zeros((max_iters,), jnp.float32),
+             jnp.zeros((), jnp.int32), loss0.astype(jnp.float32), params)
+    out = jax.lax.while_loop(cond, body, carry)
+    k, trace, best, best_p = out[0], out[5], out[7], out[8]
+
+    # pad the unreached tail with the best (returned) loss, and pin the
+    # last slot to it unconditionally: trace[-1] must be the loss of the
+    # params this call returns, also when the budget ran out on a final
+    # step that was worse than the best
+    trace = jnp.where(jnp.arange(max_iters) < k, trace, best)
+    trace = trace.at[-1].set(best)
+    return best_p, trace, k

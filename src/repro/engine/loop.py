@@ -12,12 +12,15 @@ keeping the whole loop resident on the accelerator; this module is that loop:
 * ``make_adam_runner`` — the compiled form: a jitted runner whose
   ``(params, m, v)`` buffers are donated on accelerator backends, and whose
   data operands are arguments (not closures) so one compile serves every
-  call with the same shapes.
+  call with the same shapes.  ``stop=`` swaps the fixed-length scan for the
+  early-stopped ``lax.while_loop`` (``engine.convergence.adam_until``).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.engine.convergence import adam_update, adam_until, check_stop
 
 __all__ = ["adam_scan", "make_adam_runner"]
 
@@ -31,46 +34,60 @@ def adam_scan(loss_fn, params, *, iters, lr, b1=0.9, b2=0.999, eps=1e-8,
 
     Returns ``(params, trace)`` where ``trace[k]`` is the loss after ``k+1``
     updates (same convention as evaluating the loss after each step of the
-    seed's Python loop).  The final trace entry costs one extra forward pass;
-    the per-step entries reuse the forward already needed for the gradient.
+    seed's Python loop).  Each step applies the update *first* and then
+    evaluates ``value_and_grad`` at the new params — the loss closes the
+    step's own trace slot and the gradient seeds the next step — the same
+    step shape as the early-stopped ``engine.convergence.adam_until``, so
+    the two trajectories match step for step.  The former separate
+    trace-closing forward pass (``loss_fn(p)`` after the scan) is gone; its
+    cost moved into the final step's in-scan evaluation, whose gradient is
+    unused (a forward traded for a backward — a wash under the analytic
+    gather adjoint, where the two cost about the same).
     """
     if iters < 1:
         raise ValueError(f"iters must be >= 1, got {iters}")
     m = jnp.zeros_like(params) if m is None else m
     v = jnp.zeros_like(params) if v is None else v
 
+    vg = jax.value_and_grad(loss_fn)
+    _, g0 = vg(params)  # gradient at the initial params seeds step 1
+
     def step(carry, i):
-        p, m, v = carry
-        loss, g = jax.value_and_grad(loss_fn)(p)
-        m = b1 * m + (1 - b1) * g
-        v = b2 * v + (1 - b2) * g * g
-        mh = m / (1 - b1**i)
-        vh = v / (1 - b2**i)
-        return (p - lr * mh / (jnp.sqrt(vh) + eps), m, v), loss
+        p, m, v, g = carry
+        p, m, v = adam_update(p, m, v, g, i, lr=lr, b1=b1, b2=b2, eps=eps)
+        loss, g = vg(p)  # post-update loss = this step's trace entry
+        return (p, m, v, g), loss
 
     steps = jnp.arange(1, iters + 1, dtype=jnp.float32)
-    (p, _, _), pre = jax.lax.scan(step, (params, m, v), steps)
-    # pre[k] = loss *before* update k+1; shift by one and close with the
-    # final loss so trace[k] = loss after k+1 updates.
-    trace = jnp.concatenate([pre[1:], loss_fn(p)[None]])
+    (p, _, _, _), trace = jax.lax.scan(step, (params, m, v, g0), steps)
     return p, trace
 
 
 def make_adam_runner(loss_builder, *, iters, lr, b1=0.9, b2=0.999, eps=1e-8,
-                     donate=None):
-    """Build a jitted ``(params, m, v, *data) -> (params, trace)`` runner.
+                     donate=None, stop=None):
+    """Build a jitted ``(params, m, v, *data) -> ...`` runner.
 
     ``loss_builder(*data)`` returns the scalar loss function of the params;
     the data arrays travel through jit as arguments, so callers that cache
     the runner (e.g. by shape) pay one compile per configuration, not per
     call.  ``(params, m, v)`` are donated unless ``donate=False`` (donation
     is skipped on CPU, where XLA cannot honour it and only warns).
+
+    With ``stop=None`` the runner is the fixed-length scan and returns
+    ``(params, trace)``.  With a resolved ``ConvergenceConfig`` it runs
+    ``adam_until`` instead and returns ``(params, trace, steps_taken)`` —
+    the trace padded to ``stop.max_iters`` (see ``engine.convergence``).
     """
     if donate is None:
         donate = jax.default_backend() != "cpu"
+    stop = check_stop(stop, iters)
 
     def run(p, m, v, *data):
-        return adam_scan(loss_builder(*data), p, iters=iters, lr=lr,
-                         b1=b1, b2=b2, eps=eps, m=m, v=v)
+        loss_fn = loss_builder(*data)
+        if stop is None:
+            return adam_scan(loss_fn, p, iters=iters, lr=lr,
+                             b1=b1, b2=b2, eps=eps, m=m, v=v)
+        return adam_until(loss_fn, p, stop=stop, lr=lr,
+                          b1=b1, b2=b2, eps=eps, m=m, v=v)
 
     return jax.jit(run, donate_argnums=(0, 1, 2) if donate else ())

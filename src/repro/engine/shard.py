@@ -88,6 +88,13 @@ def pad_batch(x, multiple):
     no similarity term ever sees a degenerate all-zero volume.
     """
     b = x.shape[0]
+    if b == 0:
+        # x[-1:] on an empty leading axis repeats nothing — padding would
+        # silently return an empty array and the batched program would fail
+        # much later with an opaque shape error
+        raise ValueError(
+            "pad_batch got an empty batch (leading axis 0); there is no "
+            "last entry to repeat — supply at least one pair")
     pad = (-b) % int(multiple)
     if pad:
         x = jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)], axis=0)
@@ -107,7 +114,8 @@ def batch_mask(orig_b, padded_b):
 
 def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
                      bending_weight, mode, impl, similarity, mesh,
-                     grad_impl="xla", compute_dtype=None, rules=None):
+                     grad_impl="xla", compute_dtype=None, rules=None,
+                     stop=None):
     """Batched multi-level FFD with explicit sharding constraints.
 
     Same math as ``jax.vmap(engine.batch.ffd_pipeline)`` — the pyramid, the
@@ -116,8 +124,16 @@ def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
     pyramid, on the control grid entering and leaving every scan level, and
     on the outputs.  Returns ``(warped, phi, losses)`` with shapes
     ``(B, X, Y, Z)``, ``(B, *grid, 3)``, ``(B, levels)``.
+
+    ``stop`` (a resolved ``ConvergenceConfig``) swaps each level's scan for
+    the early-stopped ``lax.while_loop`` (``engine.convergence.adam_until``)
+    — the loop's lane masking is pure per-pair arithmetic, so it shards
+    exactly like the scan (batch over data, no cross-device traffic beyond
+    the loop predicate's all-reduce) — and appends a ``(B, levels)`` steps
+    array to the return.
     """
     from repro.engine.batch import ffd_level_loss
+    from repro.engine.convergence import adam_until
 
     rules = REGISTRATION_RULES(mesh.axis_names) if rules is None else rules
 
@@ -135,6 +151,7 @@ def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
 
     phi = None
     finals = []
+    steps = []
     for f, m in pyramid:
         gshape = ffd.grid_shape_for_volume(f.shape[1:], tile)
         if phi is None:
@@ -148,9 +165,14 @@ def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
                 f1, m1, tile=tile, bending_weight=bending_weight,
                 mode=mode, impl=impl, grad_impl=grad_impl,
                 compute_dtype=compute_dtype, similarity=similarity)
-            return adam_scan(loss_fn, p1, iters=iters, lr=lr)
+            if stop is None:
+                return adam_scan(loss_fn, p1, iters=iters, lr=lr)
+            return adam_until(loss_fn, p1, stop=stop, lr=lr)
 
-        phi, trace = jax.vmap(level)(f, m, phi)
+        out = jax.vmap(level)(f, m, phi)
+        phi, trace = out[:2]
+        if stop is not None:
+            steps.append(out[2])
         phi = cons(phi, GRID_AXES)
         finals.append(trace[:, -1])
 
@@ -161,12 +183,14 @@ def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
 
     warped = cons(jax.vmap(finish)(moving, phi), VOLUME_AXES)
     losses = cons(jnp.stack(finals, axis=1), LOSS_AXES)
-    return warped, phi, losses
+    if stop is None:
+        return warped, phi, losses
+    return warped, phi, losses, cons(jnp.stack(steps, axis=1), LOSS_AXES)
 
 
 def compile_sharded_batch(mesh, tile, levels, iters, lr,
                           bending_weight, mode, impl, similarity,
-                          grad_impl="xla", compute_dtype=None):
+                          grad_impl="xla", compute_dtype=None, stop=None):
     """Build the jitted sharded pipeline for one (mesh, configuration).
 
     Uncached by design: ``engine.batch._compiled_batch`` is the single
@@ -179,16 +203,17 @@ def compile_sharded_batch(mesh, tile, levels, iters, lr,
     """
     rules = REGISTRATION_RULES(mesh.axis_names)
     vol_sh = NamedSharding(mesh, rules.spec(VOLUME_AXES))
-    out_sh = (vol_sh,
-              NamedSharding(mesh, rules.spec(GRID_AXES)),
-              NamedSharding(mesh, rules.spec(LOSS_AXES)))
+    loss_sh = NamedSharding(mesh, rules.spec(LOSS_AXES))
+    out_sh = (vol_sh, NamedSharding(mesh, rules.spec(GRID_AXES)), loss_sh)
+    if stop is not None:  # the (B, levels) steps array shards like losses
+        out_sh = out_sh + (loss_sh,)
 
     def batched(F, M):
         return sharded_pipeline(
             F, M, tile=tile, levels=levels, iters=iters, lr=lr,
             bending_weight=bending_weight, mode=mode, impl=impl,
             grad_impl=grad_impl, compute_dtype=compute_dtype,
-            similarity=similarity, mesh=mesh, rules=rules)
+            similarity=similarity, mesh=mesh, rules=rules, stop=stop)
 
     return jax.jit(batched, in_shardings=(vol_sh, vol_sh),
                    out_shardings=out_sh)

@@ -1,0 +1,297 @@
+"""Convergence subsystem (ISSUE 5): early-stopped Adam + per-pair masking.
+
+Covers the tentpole (``engine.convergence``: ``ConvergenceConfig`` /
+``adam_until``, ``stop=`` through ``register_batch`` / ``ffd_register`` /
+the sharded pipeline) and the satellite bugfixes that ride along
+(``adam_scan`` trace restructure, ``pad_batch`` B=0, fp32 objective
+scoring, ``BatchRegistrationResult.compiled``, the autotuner's fixed-iters
+pin).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ffd
+from repro.core.registration import ffd_register
+from repro.data.volumes import make_pair
+from repro.engine import (ConvergenceConfig, adam_scan, adam_until,
+                          autotune_bsi, make_registration_mesh,
+                          register_batch)
+from repro.engine.batch import ffd_level_loss
+from repro.engine.shard import pad_batch
+
+TILE = (6, 6, 6)
+SHAPE = (22, 20, 18)
+# the bench small early-stop preset's knobs (registration_bench
+# --earlystop): monotone descent at this lr, so the plateau rule is clean
+KW = dict(tile=TILE, levels=2, iters=24, lr=0.1, mode="separable",
+          impl="jnp")
+STOP = ConvergenceConfig(tol=3e-4, patience=8)
+
+
+def _stack(mags):
+    pairs = [make_pair(shape=SHAPE, tile=TILE, magnitude=m, seed=s)
+             for s, m in enumerate(mags)]
+    return (jnp.stack([p[0] for p in pairs]),
+            jnp.stack([p[1] for p in pairs]))
+
+
+# ---------------------------------------------------------------- config
+
+def test_convergence_config_validates_and_resolves():
+    with pytest.raises(ValueError):
+        ConvergenceConfig(tol=-1.0)
+    with pytest.raises(ValueError):
+        ConvergenceConfig(patience=0)
+    with pytest.raises(ValueError):
+        ConvergenceConfig(max_iters=0)
+    cfg = ConvergenceConfig(tol=1e-3, patience=4).resolve(40)
+    assert cfg.max_iters == 40  # inherits the caller's iters
+    assert ConvergenceConfig(max_iters=7).resolve(40).max_iters == 7
+    assert hash(cfg)  # lru_cache key material
+    with pytest.raises(ValueError):  # unresolved config is rejected
+        adam_until(lambda p: jnp.sum(p * p), jnp.zeros(3),
+                   stop=ConvergenceConfig(), lr=0.1)
+
+
+# ------------------------------------------------------- adam_until core
+
+def test_adam_until_stops_early_and_pads_trace():
+    """steps_taken < max_iters on an easy problem; the padded trace keeps
+    the fixed-length shape and trace[-1] = loss of the returned params."""
+    def loss_fn(p):
+        return jnp.sum((p - 3.0) ** 2)
+
+    p0 = jnp.zeros((4,), jnp.float32)
+    stop = ConvergenceConfig(tol=1e-4, patience=3).resolve(200)
+    p, trace, k = jax.jit(
+        lambda q: adam_until(loss_fn, q, stop=stop, lr=0.5))(p0)
+    assert trace.shape == (200,)
+    assert int(k) < 200
+    assert float(trace[-1]) == float(trace[int(k) - 1]) or \
+        float(trace[-1]) <= float(trace[int(k) - 1])  # padded with best
+    # the executed prefix is identical to the fixed-length scan
+    p_fix, t_fix = adam_scan(loss_fn, p0, iters=int(k), lr=0.5)
+    np.testing.assert_allclose(np.asarray(trace[:int(k)]),
+                               np.asarray(t_fix), rtol=1e-6)
+
+
+def test_adam_until_exhausted_budget_matches_adam_scan():
+    """With a budget too small to plateau, the while loop == the scan."""
+    def loss_fn(p):
+        return jnp.sum((p - 3.0) ** 2)
+
+    p0 = jnp.arange(4, dtype=jnp.float32)
+    stop = ConvergenceConfig(tol=1e-6, patience=10).resolve(12)
+    p_u, t_u, k = adam_until(loss_fn, p0, stop=stop, lr=0.1)
+    p_s, t_s = adam_scan(loss_fn, p0, iters=12, lr=0.1)
+    assert int(k) == 12
+    np.testing.assert_allclose(np.asarray(t_u), np.asarray(t_s), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(p_u), np.asarray(p_s), atol=1e-7)
+
+
+def test_adam_until_returns_best_params_when_optimiser_degrades():
+    """A pair the loop can only make worse keeps its (best) initial params
+    — the pad_batch-filler / already-converged lane story."""
+    def loss_fn(p):
+        return jnp.sum(p * p)  # start at the optimum
+
+    p0 = jnp.zeros((4,), jnp.float32)
+    stop = ConvergenceConfig(tol=1e-4, patience=4).resolve(50)
+    p, trace, k = adam_until(loss_fn, p0, stop=stop, lr=0.5)
+    assert int(k) == 4  # stops as soon as the window closes
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p0))
+    assert float(trace[-1]) == 0.0  # padded with the best (initial) loss
+
+
+# ------------------------------------------- satellite: adam_scan re-jig
+
+def _adam_scan_pre_issue5(loss_fn, params, *, iters, lr, b1=0.9, b2=0.999,
+                          eps=1e-8):
+    """The pre-ISSUE-5 implementation: eval-then-update steps plus one
+    extra full forward pass (`loss_fn(p)[None]`) to close the trace."""
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+
+    def step(carry, i):
+        p, m, v = carry
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1**i)
+        vh = v / (1 - b2**i)
+        return (p - lr * mh / (jnp.sqrt(vh) + eps), m, v), loss
+
+    steps = jnp.arange(1, iters + 1, dtype=jnp.float32)
+    (p, _, _), pre = jax.lax.scan(step, (params, m, v), steps)
+    return p, jnp.concatenate([pre[1:], loss_fn(p)[None]])
+
+
+def test_adam_scan_trace_matches_old_closing_forward_impl():
+    """Satellite: the restructured step (carrying the post-update loss)
+    keeps the trace convention — equality vs the old implementation at
+    1e-6 — without the separate trace-closing loss_fn call."""
+    fixed, moving, _ = make_pair(shape=(18, 16, 14), tile=(5, 5, 5),
+                                 magnitude=1.2, seed=0)
+    loss_fn = ffd_level_loss(fixed, moving, tile=(5, 5, 5),
+                             bending_weight=5e-3, mode="separable",
+                             impl="jnp")
+    gshape = ffd.grid_shape_for_volume(fixed.shape, (5, 5, 5))
+    p0 = jnp.zeros(gshape + (3,), jnp.float32)
+    p_old, t_old = _adam_scan_pre_issue5(loss_fn, p0, iters=6, lr=0.3)
+    p_new, t_new = adam_scan(loss_fn, p0, iters=6, lr=0.3)
+    np.testing.assert_allclose(np.asarray(t_new), np.asarray(t_old),
+                               rtol=1e-6, atol=1e-9)
+    # params agree to fusion-order noise (same arithmetic, different
+    # program structure, so XLA may re-associate)
+    np.testing.assert_allclose(np.asarray(p_new), np.asarray(p_old),
+                               atol=2e-5)
+
+
+# ------------------------------------------------- batched registration
+
+def test_register_batch_stop_none_bit_identical():
+    """stop=None must route to the exact fixed-iters program that omitting
+    stop uses (bitwise-equal outputs, no steps array) — guarding against a
+    future 'None = ConvergenceConfig(tol=0)'-style rerouting.  Parity with
+    the *pre-PR* scan implementation is covered separately by
+    test_adam_scan_trace_matches_old_closing_forward_impl."""
+    F, M = _stack([0.5, 1.5])
+    a = register_batch(F, M, **KW)
+    b = register_batch(F, M, stop=None, **KW)
+    np.testing.assert_array_equal(np.asarray(a.warped), np.asarray(b.warped))
+    np.testing.assert_array_equal(np.asarray(a.params), np.asarray(b.params))
+    np.testing.assert_array_equal(np.asarray(a.losses), np.asarray(b.losses))
+    assert a.steps is None and b.steps is None
+
+
+def test_register_batch_earlystop_quality_and_savings():
+    """Acceptance: mixed easy/hard batch — early-stopped final losses
+    within 2% of fixed-iters (easy lanes may be better) with measurably
+    fewer Adam steps on the easy lanes."""
+    F, M = _stack([0.3, 2.5, 0.3, 2.5])
+    base = register_batch(F, M, **KW)
+    res = register_batch(F, M, stop=STOP, **KW)
+    assert res.steps is not None and res.steps.shape == (4, 2)
+    steps = np.asarray(res.steps)
+    budget = 2 * KW["iters"]
+    # easy lanes (0, 2) stop measurably early; hard lanes may use it all
+    assert steps[0].sum() < budget / 2
+    assert steps[2].sum() < budget / 2
+    assert steps.sum() < 4 * budget  # net batch saving
+    excess = np.asarray(res.losses[:, -1]) / np.asarray(base.losses[:, -1])
+    assert float(excess.max()) < 1.02  # within 2% of fixed-iters
+    assert res.warped.shape == F.shape
+
+
+def test_register_batch_masked_lanes_freeze():
+    """A converged lane's params freeze at its own stopping point: the
+    easy lane of a mixed batch finishes with the same params (and step
+    count) as registering that pair alone under the same stop rule."""
+    F, M = _stack([0.3, 2.5])
+    both = register_batch(F, M, stop=STOP, **KW)
+    solo = register_batch(F[:1], M[:1], stop=STOP, **KW)
+    assert int(both.steps[0].sum()) == int(solo.steps[0].sum())
+    assert int(both.steps[0].sum()) < int(both.steps[1].sum())
+    np.testing.assert_allclose(np.asarray(both.params[0]),
+                               np.asarray(solo.params[0]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(both.warped[0]),
+                               np.asarray(solo.warped[0]), atol=1e-5)
+
+
+def test_ffd_register_stop_reports_steps():
+    f, m, _ = make_pair(shape=SHAPE, tile=TILE, magnitude=0.3, seed=0)
+    res = ffd_register(f, m, stop=STOP, **KW)
+    assert isinstance(res.steps, list) and len(res.steps) == KW["levels"]
+    assert all(1 <= s <= KW["iters"] for s in res.steps)
+    assert sum(res.steps) < KW["levels"] * KW["iters"]  # easy pair stops
+
+
+def test_register_batch_sharded_stop_matches_unsharded():
+    """mesh= parity under early stopping (B=3 exercises pad lanes on any
+    even device count; the filler lane mirrors the last real pair, so it
+    converges with it and never extends the loop)."""
+    F, M = _stack([0.3, 2.5, 0.6])
+    base = register_batch(F, M, stop=STOP, **KW)
+    res = register_batch(F, M, stop=STOP, mesh=make_registration_mesh(),
+                         **KW)
+    assert res.warped.shape == F.shape
+    np.testing.assert_allclose(np.asarray(res.warped),
+                               np.asarray(base.warped), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(res.params),
+                               np.asarray(base.params), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(res.losses),
+                               np.asarray(base.losses), rtol=1e-4,
+                               atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(res.steps),
+                                  np.asarray(base.steps))
+
+
+# ----------------------------------------------------- satellite fixes
+
+def test_pad_batch_empty_raises():
+    """Satellite: B=0 used to pad to an empty array (x[-1:] repeats
+    nothing) and fail later with an opaque shape error."""
+    with pytest.raises(ValueError, match="empty batch"):
+        pad_batch(jnp.zeros((0, 4, 4, 4), jnp.float32), 4)
+    with pytest.raises(ValueError, match="empty batch"):
+        register_batch(jnp.zeros((0, 8, 8, 8)), jnp.zeros((0, 8, 8, 8)),
+                       mode="separable", impl="jnp")
+
+
+def test_ffd_level_loss_scores_bf16_inputs_in_fp32():
+    """Satellite: a bf16 fixed volume must not drag the objective into
+    bf16 — the similarity (and its trade-off against the fp32 bending
+    term) is scored in fp32 regardless of input dtype."""
+    fixed, moving, _ = make_pair(shape=(16, 14, 12), tile=(5, 5, 5),
+                                 magnitude=1.0, seed=1)
+    gshape = ffd.grid_shape_for_volume(fixed.shape, (5, 5, 5))
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(rng.standard_normal(gshape + (3,)) * 0.1, jnp.float32)
+
+    def loss_with(f, m):
+        return ffd_level_loss(f, m, tile=(5, 5, 5), bending_weight=5e-3,
+                              mode="separable", impl="jnp")(p)
+
+    ref = loss_with(fixed, moving)
+    lo = loss_with(fixed.astype(jnp.bfloat16), moving)
+    assert lo.dtype == jnp.float32  # objective stays fp32
+    # only the input quantisation differs — the scoring precision does not
+    np.testing.assert_allclose(float(lo), float(ref), rtol=5e-3)
+
+
+def test_register_batch_reports_compiled_flag():
+    """Satellite: seconds no longer silently conflates compile time — the
+    first call of a configuration flags compiled=True, the warm call
+    doesn't (distinct stop= configs are distinct programs)."""
+    F, M = _stack([0.8])
+    kw = dict(tile=TILE, levels=1, iters=3, mode="separable", impl="jnp")
+    stop = ConvergenceConfig(tol=1e-3, patience=2, max_iters=3)
+    cold = register_batch(F, M, stop=stop, **kw)
+    warm = register_batch(F, M, stop=stop, **kw)
+    assert cold.compiled and not warm.compiled
+
+
+def test_stop_rejects_bare_tolerance_floats():
+    """Every entry point rejects the natural mistake of passing the
+    tolerance directly (stop=1e-4) with a clear TypeError."""
+    from repro.core.registration import affine_register
+
+    f, m, _ = make_pair(shape=(12, 10, 8), tile=(4, 4, 4), magnitude=0.5,
+                        seed=0)
+    with pytest.raises(TypeError, match="ConvergenceConfig"):
+        ffd_register(f, m, tile=(4, 4, 4), levels=1, iters=2,
+                     mode="separable", impl="jnp", stop=1e-4)
+    with pytest.raises(TypeError, match="ConvergenceConfig"):
+        affine_register(f, m, iters=2, stop=1e-4)
+    with pytest.raises(TypeError, match="ConvergenceConfig"):
+        register_batch(f[None], m[None], tile=(4, 4, 4), levels=1, iters=2,
+                       mode="separable", impl="jnp", stop=1e-4)
+
+
+def test_autotune_rejects_stop():
+    """Satellite: the tuner's timing workload pins stop=None — the winner
+    must rank per-step cost, never a data-dependent loop length."""
+    with pytest.raises(ValueError, match="stop"):
+        autotune_bsi((8, 8, 8), (3, 3, 3), stop=ConvergenceConfig())
