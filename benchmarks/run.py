@@ -5,6 +5,8 @@ Prints ``name,us_per_call,derived`` CSV rows for:
   * bsi_accuracy       — paper Tables 3-4 (error vs float64 reference)
   * registration_bench — paper Figs. 8-9 + Table 5 (FFD time + MAE/SSIM)
   * transfer_model     — paper Appendix A (Eqs. A.1-A.4 transfer counts)
+  * serving_bench      — continuous batching vs sequential register_batch
+                         under a Poisson request stream (p50/p99, pairs/s)
 
 Presets:
   * default — scaled-down volumes (CPU wall-time budget)
@@ -35,7 +37,7 @@ except ModuleNotFoundError:  # src-layout checkout without install
 
 def _suites(preset):
     from benchmarks import (bsi_accuracy, bsi_speed, registration_bench,
-                            transfer_model)
+                            serving_bench, transfer_model)
     from benchmarks.common import TINY_VOLUMES
 
     if preset == "ci":
@@ -57,6 +59,11 @@ def _suites(preset):
             # stop=ConvergenceConfig vs fixed iters (ISSUE 5 acceptance)
             ("registration_earlystop", lambda: registration_bench.main(
                 earlystop=True, shape=(22, 20, 18), iters=24, batch=4)),
+            # continuous batching (engine.serve) vs sequential
+            # register_batch under a Poisson stream: asserts >= 1.5x
+            # pairs/sec at <= 2% loss excess (PR 6 acceptance), and its
+            # p50/p99 latency rows ride the compare.py trajectory gate
+            ("serving", serving_bench.main),
         ]
     full = preset == "full"
     return [

@@ -1,0 +1,190 @@
+"""Serving benchmark: continuous batching vs sequential ``register_batch``.
+
+A Poisson stream of mixed-difficulty registration requests is played twice
+against the same compiled programs:
+
+* **sequential** — the pre-``engine.serve`` serving idiom: whenever the
+  device is free, take the oldest ``lanes`` queued pairs and run one
+  ``register_batch`` (with the same early-stopping config).  The batch-wide
+  while-loop runs until the *slowest* pair converges, so easy pairs' lanes
+  burn BSI steps long after their own convergence masks froze them.
+* **continuous** — ``engine.serve.RegistrationScheduler``: the same lane
+  width, but lanes freed by the convergence mask are immediately respliced
+  with queued pairs, so lane-steps track useful work.
+
+Both arms see identical pairs and identical arrival times (the arrival rate
+is calibrated to ~2x the sequential arm's easy-pair capacity, so both arms
+run backlogged and the comparison is throughput-dominated).  Reported rows:
+p50/p99 request latency and time-per-pair (derived: pairs/sec) for each
+arm.  The run *asserts* the acceptance criteria — continuous throughput
+>= ``min_speedup`` x sequential at <= ``max_loss_excess`` relative
+final-loss excess — so a scheduler regression fails the suite outright,
+and the latency rows additionally ride the ``compare.py`` trajectory gate.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _pairs(shape, n, hard_every, seed):
+    """Mixed-difficulty volume pairs: every ``hard_every``-th is hard.
+
+    Easy pairs are a sub-voxel smooth shift of the fixed volume — Adam
+    plateaus within a few steps.  Hard pairs add a large smooth deformation
+    plus fresh texture, so the loss keeps improving for the whole budget.
+    """
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=shape).astype(np.float32)
+    x, y, z = np.meshgrid(*[np.linspace(0, np.pi, s) for s in shape],
+                          indexing="ij")
+    wave = np.sin(x) * np.sin(y) * np.sin(z)
+    out = []
+    for i in range(n):
+        f = base + 0.05 * rng.normal(size=shape).astype(np.float32)
+        if hard_every and i % hard_every == 0:
+            m = np.roll(f, 3, axis=0) + 2.5 * wave.astype(np.float32)
+            m = m + 0.3 * rng.normal(size=shape).astype(np.float32)
+        else:
+            m = f + 0.02 * wave.astype(np.float32)
+        out.append((f.astype(np.float32), m.astype(np.float32)))
+    return out
+
+
+def _pctl(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def main(shape=(28, 24, 20), lanes=4, chunk=3, n=36, hard_every=4,
+         iters=32, seed=0, reps=2, min_speedup=1.5, max_loss_excess=0.02):
+    from repro.core.options import RegistrationOptions
+    from repro.engine.batch import register_batch
+    from repro.engine.convergence import ConvergenceConfig
+    from repro.engine.serve import RegistrationScheduler
+
+    opts = RegistrationOptions(
+        tile=(6, 6, 6), levels=2, iters=iters, lr=0.1,
+        mode="separable", impl="jnp", grad_impl="xla",
+        stop=ConvergenceConfig(tol=2e-3, patience=3))
+    pairs = _pairs(shape, n, hard_every, seed)
+    easy = [p for i, p in enumerate(pairs)
+            if not (hard_every and i % hard_every == 0)][:lanes]
+    easy = (easy * lanes)[:lanes]
+
+    # -- warm-up: compile both arms' programs outside the timed region ----
+    F = np.stack([f for f, _ in easy])
+    M = np.stack([m for _, m in easy])
+    register_batch(F, M, options=opts)
+    t0 = time.perf_counter()
+    register_batch(F, M, options=opts)
+    batch_s = time.perf_counter() - t0  # warm easy-batch time (calibration)
+    warm = RegistrationScheduler(opts, lanes=lanes, chunk=chunk,
+                                 max_queue=max(n, lanes))
+    for f, m in easy:
+        warm.submit(f, m)
+    warm.run_until_idle()
+
+    # Poisson arrivals at ~2x the sequential arm's easy-pair service rate:
+    # both arms run backlogged, so throughput (not idle waiting) decides.
+    rng = np.random.default_rng(seed + 1)
+    mean_ia = batch_s / lanes / 2.0
+    arrivals = np.concatenate(
+        [[0.0], rng.exponential(mean_ia, n - 1)]).cumsum()
+
+    def play_sequential():
+        lat, finals, queue, done = {}, {}, [], 0
+        start = time.perf_counter()
+        while done < n:
+            now = time.perf_counter() - start
+            queue += [i for i in range(n)
+                      if arrivals[i] <= now
+                      and i not in lat and i not in queue]
+            if not queue:
+                nxt = min(arrivals[i] for i in range(n) if i not in lat)
+                time.sleep(max(nxt - now, 0.0) + 1e-4)
+                continue
+            take, queue = queue[:lanes], queue[lanes:]
+            # pad short batches up to the lane width by repeating the first
+            # pair: register_batch compiles per batch shape, so variable B
+            # would re-trace (and charge a compile) inside the timed region
+            pad = take + take[:1] * (lanes - len(take))
+            res = register_batch(
+                np.stack([pairs[i][0] for i in pad]),
+                np.stack([pairs[i][1] for i in pad]), options=opts)
+            end = time.perf_counter() - start
+            for j, i in enumerate(take):
+                lat[i] = end - arrivals[i]
+                finals[i] = float(res.losses[j, -1])
+                done += 1
+        return lat, finals, time.perf_counter() - start
+
+    def play_continuous():
+        sched = RegistrationScheduler(opts, lanes=lanes, chunk=chunk,
+                                      max_queue=max(n, lanes))
+        lat, finals, handles = {}, {}, {}
+        start = time.perf_counter()
+        submitted = 0
+        while len(lat) < n:
+            now = time.perf_counter() - start
+            while submitted < n and arrivals[submitted] <= now:
+                f, m = pairs[submitted]
+                handles[submitted] = sched.submit(f, m)
+                submitted += 1
+            if sched.pending:
+                sched.step()
+            elif submitted < n:
+                time.sleep(max(arrivals[submitted] - now, 0.0) + 1e-4)
+            end = time.perf_counter() - start
+            for i, h in handles.items():
+                if h.done and i not in lat:
+                    lat[i] = end - arrivals[i]
+                    finals[i] = h.result().losses[-1]
+        return lat, finals, time.perf_counter() - start, sched.stats
+
+    # best-of-reps per arm (the usual min-timing discipline): one noisy
+    # pass — a background process, a lazy first-touch — must not decide
+    # the asserted speedup in either direction
+    seq_lat, seq_fin, seq_make = min(
+        (play_sequential() for _ in range(reps)), key=lambda r: r[-1])
+    con_lat, con_fin, con_make, stats = min(
+        (play_continuous() for _ in range(reps)), key=lambda r: r[2])
+
+    seq_pps = n / seq_make
+    con_pps = n / con_make
+    speedup = con_pps / seq_pps
+    excess = max(
+        (con_fin[i] - seq_fin[i]) / max(abs(seq_fin[i]), 1e-12)
+        for i in range(n))
+
+    rows = [
+        ("sequential_p50", _pctl(list(seq_lat.values()), 50) * 1e6,
+         f"{seq_pps:.2f} pairs/s"),
+        ("sequential_p99", _pctl(list(seq_lat.values()), 99) * 1e6,
+         f"makespan {seq_make:.2f}s"),
+        ("continuous_p50", _pctl(list(con_lat.values()), 50) * 1e6,
+         f"{con_pps:.2f} pairs/s"),
+        ("continuous_p99", _pctl(list(con_lat.values()), 99) * 1e6,
+         f"makespan {con_make:.2f}s"),
+        ("sequential_per_pair", 1e6 / seq_pps, f"{seq_pps:.2f} pairs/s"),
+        ("continuous_per_pair", 1e6 / con_pps,
+         f"{con_pps:.2f} pairs/s, x{speedup:.2f} vs sequential, "
+         f"loss excess {excess * 100:.2f}%, {stats.recycled} recycled, "
+         f"{stats.chunks} chunks"),
+    ]
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    if speedup < min_speedup:
+        raise AssertionError(
+            f"continuous batching sustained only x{speedup:.2f} the "
+            f"sequential throughput (acceptance floor x{min_speedup})")
+    if excess > max_loss_excess:
+        raise AssertionError(
+            f"continuous final losses exceed sequential by "
+            f"{excess * 100:.1f}% (allowed {max_loss_excess * 100:.0f}%)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

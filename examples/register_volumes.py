@@ -31,7 +31,7 @@ try:
 except ModuleNotFoundError:  # src-layout checkout without install
     sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core import ffd, metrics
+from repro.core import RegistrationOptions, ffd, metrics
 from repro.core.registration import affine_register, ffd_register
 from repro.core.similarity import available_similarities
 from repro.data.volumes import make_pair
@@ -103,18 +103,22 @@ def main():
           f"ssim={float(metrics.ssim(source, fixed)):.4f}")
 
     if not args.multimodal:
-        aff = affine_register(fixed, moving, iters=40,
-                              similarity=args.similarity)
+        aff = affine_register(fixed, moving,
+                              options=RegistrationOptions(
+                                  iters=40, lr=0.02,
+                                  similarity=args.similarity))
         print(f"affine      ({aff.seconds:5.1f}s): "
               f"mae={float(metrics.mae(aff.warped, fixed)):.4f} "
               f"ssim={float(metrics.ssim(aff.warped, fixed)):.4f}")
 
     stop = (ConvergenceConfig(tol=args.early_stop)
             if args.early_stop is not None else None)
-    res = ffd_register(fixed, moving, tile=tile, levels=2,
-                       iters=args.iters, lr=args.lr, mode=mode, impl=impl,
-                       similarity=args.similarity, stop=stop,
-                       measure_bsi_time=True)
+    # one options object configures every entry point below (and is the
+    # compiled-program cache key — see README "One options object")
+    opts = RegistrationOptions(tile=tile, levels=2, iters=args.iters,
+                               lr=args.lr, mode=mode, impl=impl,
+                               similarity=args.similarity, stop=stop)
+    res = ffd_register(fixed, moving, options=opts, measure_bsi_time=True)
     disp = ffd.dense_field(res.params, tile, shape, mode=mode, impl=impl)
     recovered = ffd.warp_volume(source, disp)
     steps_note = ("" if res.steps is None else
@@ -143,16 +147,10 @@ def main():
         sources = M
         if args.multimodal:
             M = (1.0 - M) ** 1.5  # same monotone remap as the single pair
-        batch = register_batch(F, M, tile=tile, levels=2, iters=args.iters,
-                               lr=args.lr, mode=mode, impl=impl,
-                               similarity=args.similarity, mesh=mesh,
-                               stop=stop)
+        batch = register_batch(F, M, options=opts, mesh=mesh)
         cold = batch.seconds  # includes the one-time compile
         t0 = time.perf_counter()
-        batch = register_batch(F, M, tile=tile, levels=2, iters=args.iters,
-                               lr=args.lr, mode=mode, impl=impl,
-                               similarity=args.similarity, mesh=mesh,
-                               stop=stop)
+        batch = register_batch(F, M, options=opts, mesh=mesh)
         warm = time.perf_counter() - t0
         disp0 = ffd.dense_field(batch.params[0], tile, shape,
                                 mode=mode, impl=impl)

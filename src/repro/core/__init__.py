@@ -1,3 +1,6 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from repro.core.options import UNSET, RegistrationOptions, merge_legacy_options
+
+__all__ = ["UNSET", "RegistrationOptions", "merge_legacy_options"]

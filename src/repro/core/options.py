@@ -1,0 +1,238 @@
+"""Unified registration options — one frozen, hashable configuration object.
+
+Every registration entry point used to take the same ~12-keyword sprawl
+(``tile, levels, iters, lr, bending_weight, mode, impl, grad_impl,
+compute_dtype, similarity, stop``), and each one re-validated and re-keyed
+the subset it cared about.  :class:`RegistrationOptions` consolidates that
+surface:
+
+* it is the **single place options are validated** (``__post_init__``) and
+  canonicalised (:meth:`normalized`);
+* because it is frozen and hashable, it is the **single cache key** for
+  compiled runners (``core.registration``, ``engine.batch``), the autotuner
+  (``engine.autotune.resolve_options``) and the serving buckets
+  (``engine.serve``);
+* entry points accept ``options=RegistrationOptions(...)``.  The legacy
+  keyword arguments still work through :func:`merge_legacy_options`, which
+  emits a ``DeprecationWarning`` once per call site and produces the exact
+  same options object — so the kwarg path and the options path share one
+  compiled program and return bit-identical results.
+
+This module deliberately imports nothing from ``repro`` at module scope
+(only lazily, inside methods): it sits at the bottom of the dependency
+stack so both ``repro.core`` and ``repro.engine`` can import it freely.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sys
+import warnings
+from typing import Any
+
+__all__ = [
+    "UNSET",
+    "RegistrationOptions",
+    "merge_legacy_options",
+]
+
+
+class _Unset:
+    """Sentinel distinguishing "keyword not passed" from an explicit value."""
+
+    _instance = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self):
+        return "UNSET"
+
+    def __bool__(self):
+        return False
+
+
+UNSET = _Unset()
+
+_BSI_MODES = ("auto", "gather", "tt", "ttli", "separable")
+_BSI_IMPLS = ("auto", "jnp", "pallas")
+_GRAD_IMPLS = ("auto", "xla", "jnp", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class RegistrationOptions:
+    """The full registration configuration, validated and hashable.
+
+    Defaults match the historical ``ffd_register`` / ``register_batch``
+    keyword defaults; ``affine_register`` keeps its own legacy defaults
+    (``iters=60, lr=0.02``) through its deprecation shim.
+
+    Fields
+    ------
+    tile:            control-point spacing ``(dx, dy, dz)``.
+    levels:          pyramid levels (coarse-to-fine, 2x downsampling).
+    iters:           Adam steps per level (also the early-stop ceiling).
+    lr:              Adam learning rate.
+    bending_weight:  bending-energy regularisation weight.
+    mode, impl:      BSI algorithm form / kernel backend (``"auto"`` =
+                     the ``engine.autotune`` winner).
+    grad_impl:       BSI adjoint implementation (``"auto"`` | ``"xla"`` |
+                     ``"jnp"`` | ``"pallas"``).
+    compute_dtype:   reduced-precision dtype for BSI + warp (e.g.
+                     ``"bfloat16"``), or None for fp32 throughout.
+    similarity:      registered similarity name or a ``(warped, fixed) ->
+                     scalar`` loss callable (lower = better).
+    stop:            optional ``engine.convergence.ConvergenceConfig`` —
+                     early-stop each level when the loss plateaus.
+    """
+
+    tile: tuple = (5, 5, 5)
+    levels: int = 2
+    iters: int = 40
+    lr: float = 0.5
+    bending_weight: float = 5e-3
+    mode: str = "auto"
+    impl: str = "auto"
+    grad_impl: str = "auto"
+    compute_dtype: Any = None
+    similarity: Any = "ssd"
+    stop: Any = None
+
+    def __post_init__(self):
+        tile = tuple(int(t) for t in self.tile)
+        if len(tile) != 3 or any(t < 1 for t in tile):
+            raise ValueError(f"tile must be 3 positive ints, got {self.tile!r}")
+        object.__setattr__(self, "tile", tile)
+        for name in ("levels", "iters"):
+            v = int(getattr(self, name))
+            if v < 1:
+                raise ValueError(f"{name} must be >= 1, got {v}")
+            object.__setattr__(self, name, v)
+        for name in ("lr", "bending_weight"):
+            v = float(getattr(self, name))
+            if not v >= 0 or (name == "lr" and v == 0):
+                raise ValueError(f"{name} must be positive, got {v}")
+            object.__setattr__(self, name, v)
+        if self.mode not in _BSI_MODES:
+            raise ValueError(f"mode must be one of {_BSI_MODES}, got {self.mode!r}")
+        if self.impl not in _BSI_IMPLS:
+            raise ValueError(f"impl must be one of {_BSI_IMPLS}, got {self.impl!r}")
+        if self.grad_impl not in _GRAD_IMPLS:
+            raise ValueError(
+                f"grad_impl must be one of {_GRAD_IMPLS}, got {self.grad_impl!r}"
+            )
+        if self.compute_dtype is not None:
+            import jax.numpy as jnp
+
+            object.__setattr__(
+                self, "compute_dtype", jnp.dtype(self.compute_dtype).name
+            )
+        if not (callable(self.similarity) or isinstance(self.similarity, str)):
+            raise TypeError(
+                "similarity must be a registered name or a loss callable, "
+                f"got {self.similarity!r}"
+            )
+        if self.stop is not None:
+            from repro.engine.convergence import ConvergenceConfig
+
+            if not isinstance(self.stop, ConvergenceConfig):
+                raise TypeError(
+                    f"stop must be a ConvergenceConfig or None, got {self.stop!r}; "
+                    "e.g. stop=ConvergenceConfig(tol=1e-4)"
+                )
+
+    def replace(self, **changes) -> "RegistrationOptions":
+        """A copy with the given fields replaced (re-validated)."""
+        return dataclasses.replace(self, **changes)
+
+    def normalized(self) -> "RegistrationOptions":
+        """Canonical form: the cache-key-ready copy.
+
+        ``similarity`` collapses to its registry key (so ``"nmi"`` and a
+        registered ``nmi()`` callable share caches), and ``stop`` resolves
+        its ``max_iters`` against ``iters`` — after this, equal
+        configurations compare (and hash) equal.
+        """
+        from repro.core.similarity import resolve_similarity
+        from repro.engine.convergence import check_stop
+
+        sim_key, _ = resolve_similarity(self.similarity)
+        return dataclasses.replace(
+            self, similarity=sim_key, stop=check_stop(self.stop, self.iters)
+        )
+
+    def for_affine(self) -> "RegistrationOptions":
+        """Canonical key for the affine path.
+
+        Affine registration only consumes ``iters``, ``lr``, ``similarity``
+        and ``stop``; pinning every FFD-only field to its default keeps the
+        affine runner cache from fragmenting when callers vary e.g. ``tile``.
+        """
+        base = RegistrationOptions()
+        return self.normalized().replace(
+            tile=base.tile,
+            levels=base.levels,
+            bending_weight=base.bending_weight,
+            mode=base.mode,
+            impl=base.impl,
+            grad_impl=base.grad_impl,
+            compute_dtype=base.compute_dtype,
+        )
+
+
+# DeprecationWarning bookkeeping: one warning per (entry point, call site),
+# deterministic regardless of the process's warning filters.  Tests reset it
+# via _reset_deprecation_registry().
+_WARNED_SITES: set = set()
+
+
+def _reset_deprecation_registry():
+    _WARNED_SITES.clear()
+
+
+def merge_legacy_options(
+    fn_name, options, legacy: dict, *, defaults=None, stacklevel=3
+) -> RegistrationOptions:
+    """The deprecation shim behind every registration entry point.
+
+    ``legacy`` maps field name -> value-or-:data:`UNSET` for the keyword
+    arguments the entry point still accepts.  Exactly one of the two paths
+    may be used:
+
+    * ``options=`` given, no legacy kwargs -> ``options`` passes through;
+    * legacy kwargs (or nothing) -> they overlay ``defaults`` into a fresh
+      :class:`RegistrationOptions`, and — if any legacy kwarg was actually
+      passed — a ``DeprecationWarning`` fires, once per call site.
+
+    Mixing both raises ``TypeError`` (silently preferring one would make the
+    other a no-op).
+    """
+    passed = {k: v for k, v in legacy.items() if v is not UNSET}
+    if options is not None:
+        if not isinstance(options, RegistrationOptions):
+            raise TypeError(
+                f"{fn_name}: options must be a RegistrationOptions, "
+                f"got {type(options).__name__}"
+            )
+        if passed:
+            raise TypeError(
+                f"{fn_name}: pass either options= or the legacy keyword "
+                f"arguments {sorted(passed)}, not both"
+            )
+        return options
+    if passed:
+        frame = sys._getframe(stacklevel - 1)
+        site = (fn_name, frame.f_code.co_filename, frame.f_lineno)
+        if site not in _WARNED_SITES:
+            _WARNED_SITES.add(site)
+            warnings.warn(
+                f"{fn_name}: the keyword arguments {sorted(passed)} are "
+                "deprecated; pass options=RegistrationOptions(...) instead "
+                "(see repro.core.options)",
+                DeprecationWarning,
+                stacklevel=stacklevel,
+            )
+    base = RegistrationOptions() if defaults is None else defaults
+    return base.replace(**passed) if passed else base

@@ -31,13 +31,17 @@ import jax.numpy as jnp
 
 from repro.core import ffd
 from repro.core.ffd import downsample2  # re-exported (seed API)
-from repro.core.similarity import resolve_similarity
-from repro.engine.autotune import resolve_bsi
+from repro.core.options import (UNSET, RegistrationOptions,
+                                merge_legacy_options)
+from repro.engine.autotune import resolve_options
 from repro.engine.batch import ffd_level_loss
-from repro.engine.convergence import check_stop
 from repro.engine.loop import make_adam_runner
 
 __all__ = ["RegistrationResult", "affine_register", "ffd_register", "downsample2"]
+
+# affine_register's historical keyword defaults (the FFD defaults live on
+# RegistrationOptions itself)
+AFFINE_DEFAULTS = RegistrationOptions(iters=60, lr=0.02)
 
 
 @dataclasses.dataclass
@@ -73,8 +77,13 @@ def _affine_warp(theta, moving, vol_shape):
 
 
 @functools.lru_cache(maxsize=32)
-def _affine_runner(vol_shape, iters, lr, similarity, stop=None):
-    _, sim = resolve_similarity(similarity)
+def _affine_runner(vol_shape, options):
+    """One compiled affine loop per (shape, options) — ``options`` is a
+    canonical ``RegistrationOptions.for_affine()`` instance, the sole cache
+    key beyond the volume shape."""
+    from repro.core.similarity import resolve_similarity
+
+    _, sim = resolve_similarity(options.similarity)
 
     def loss_builder(f, mov):
         def loss_fn(theta):
@@ -82,28 +91,34 @@ def _affine_runner(vol_shape, iters, lr, similarity, stop=None):
 
         return loss_fn
 
-    return make_adam_runner(loss_builder, iters=iters, lr=lr, stop=stop)
+    return make_adam_runner(loss_builder, options=options)
 
 
-def affine_register(fixed, moving, *, iters=60, lr=0.02, similarity="ssd",
-                    stop=None):
+def affine_register(fixed, moving, *, options=None, iters=UNSET, lr=UNSET,
+                    similarity=UNSET, stop=UNSET):
     """Optimise a 3x4 affine (around the volume centre) on ``similarity``.
 
     The whole optimisation is one scan-compiled program; the runner is
-    cached by (shape, iters, lr, similarity, stop), so repeat calls skip
-    compilation.  ``similarity`` is a registered name (``"ssd" | "ncc" |
-    "lncc" | "nmi"``) or a loss callable (lower = better).  ``stop`` (a
-    ``ConvergenceConfig``) runs the loop as an early-stopped
-    ``lax.while_loop`` instead — the result's ``steps`` records the Adam
-    steps actually taken (``stop.max_iters`` defaults to ``iters``).
+    cached by (shape, options), so repeat calls skip compilation.  Configure
+    via ``options=RegistrationOptions(...)`` — only its ``iters`` / ``lr`` /
+    ``similarity`` / ``stop`` fields apply to the affine model (legacy
+    defaults: ``iters=60, lr=0.02``); the legacy keywords still work through
+    the deprecation shim and produce bit-identical results.  ``similarity``
+    is a registered name (``"ssd" | "ncc" | "lncc" | "nmi"``) or a loss
+    callable (lower = better).  ``stop`` (a ``ConvergenceConfig``) runs the
+    loop as an early-stopped ``lax.while_loop`` instead — the result's
+    ``steps`` records the Adam steps actually taken (``stop.max_iters``
+    defaults to ``iters``).
     """
     fixed = jnp.asarray(fixed, jnp.float32)
     moving = jnp.asarray(moving, jnp.float32)
-    sim_key, _ = resolve_similarity(similarity)
-    stop = check_stop(stop, iters)
+    opts = merge_legacy_options(
+        "affine_register", options,
+        dict(iters=iters, lr=lr, similarity=similarity, stop=stop),
+        defaults=AFFINE_DEFAULTS).for_affine()
+    stop = opts.stop  # resolved by for_affine()'s normalized()
     t0 = time.perf_counter()
-    runner = _affine_runner(fixed.shape, int(iters), float(lr), sim_key,
-                            stop)
+    runner = _affine_runner(fixed.shape, opts)
     theta0 = jnp.zeros((3, 4), jnp.float32)
     out = runner(theta0, jnp.zeros_like(theta0), jnp.zeros_like(theta0),
                  fixed, moving)
@@ -111,7 +126,7 @@ def affine_register(fixed, moving, *, iters=60, lr=0.02, similarity="ssd",
     steps = [int(out[2])] if stop is not None else None
     # same sampling points as the seed's Python loop: every 10th + last
     # (the early-stopped trace is padded with its final loss past the stop)
-    span = iters if stop is None else stop.max_iters
+    span = opts.iters if stop is None else stop.max_iters
     marks = sorted(set(range(10, span + 1, 10)) | {span})
     losses = [float(trace[i - 1]) for i in marks]
     warped = _affine_warp(theta, moving, fixed.shape)
@@ -121,35 +136,38 @@ def affine_register(fixed, moving, *, iters=60, lr=0.02, similarity="ssd",
 
 
 @functools.lru_cache(maxsize=64)  # bounded: ~levels x configs in flight
-def _ffd_level_runner(vol_shape, tile, iters, lr, bending_weight, mode, impl,
-                      grad_impl, compute_dtype, similarity, stop=None):
+def _ffd_level_runner(vol_shape, options):
+    """One compiled level loop per (shape, options) — the resolved
+    ``RegistrationOptions`` instance is the sole cache key beyond shape."""
     del vol_shape  # cache key only; shapes re-trace via jit
 
     def loss_builder(f, mov):
-        return ffd_level_loss(f, mov, tile=tile,
-                              bending_weight=bending_weight,
-                              mode=mode, impl=impl, grad_impl=grad_impl,
-                              compute_dtype=compute_dtype,
-                              similarity=similarity)
+        return ffd_level_loss(f, mov, tile=options.tile,
+                              bending_weight=options.bending_weight,
+                              mode=options.mode, impl=options.impl,
+                              grad_impl=options.grad_impl,
+                              compute_dtype=options.compute_dtype,
+                              similarity=options.similarity)
 
-    return make_adam_runner(loss_builder, iters=iters, lr=lr, stop=stop)
+    return make_adam_runner(loss_builder, options=options)
 
 
 def ffd_register(
     fixed,
     moving,
     *,
-    tile=(5, 5, 5),
-    levels=2,
-    iters=40,
-    lr=0.5,
-    bending_weight=5e-3,
-    mode="auto",
-    impl="auto",
-    grad_impl="auto",
-    compute_dtype=None,
-    similarity="ssd",
-    stop=None,
+    options=None,
+    tile=UNSET,
+    levels=UNSET,
+    iters=UNSET,
+    lr=UNSET,
+    bending_weight=UNSET,
+    mode=UNSET,
+    impl=UNSET,
+    grad_impl=UNSET,
+    compute_dtype=UNSET,
+    similarity=UNSET,
+    stop=UNSET,
     measure_bsi_time=False,
 ):
     """Multi-resolution FFD registration (NiftyReg workflow, paper §6).
@@ -157,42 +175,44 @@ def ffd_register(
     Pyramid: coarse-to-fine on 2x-downsampled volumes; the control grid is
     upsampled (re-expanded through BSI itself) between levels.  Each level's
     Adam loop is a single ``lax.scan`` program — one compile per pyramid
-    level, cached across calls.  ``mode``/``impl``/``grad_impl`` default to
-    ``"auto"``: the autotuned fastest BSI forward x adjoint pair for the
-    finest-level grid under the chosen ``similarity``'s forward+backward
-    workload (``grad_impl`` selects between XLA autodiff and the analytic
-    gather-only custom VJP — see ``repro.core.interpolate``).
-    ``compute_dtype`` (e.g. ``"bfloat16"``) runs BSI + warp in reduced
-    precision with fp32 params and adjoint accumulation.  ``similarity`` is a
-    registered name (``"ssd" | "ncc" | "lncc" | "nmi"`` — NMI being the
-    multi-modal NiftyReg path) or a ``(warped, fixed) -> scalar`` loss
-    callable (lower = better; see ``repro.core.similarity``).  ``stop`` (a
-    ``ConvergenceConfig``, see ``repro.engine.convergence``) replaces each
-    level's fixed-``iters`` scan with an early-stopped ``lax.while_loop``
-    (``stop.max_iters`` defaults to ``iters``); the result's ``steps`` then
-    lists the Adam steps each level actually ran.
+    level, cached across calls, keyed by the resolved
+    ``RegistrationOptions``.  Configure via ``options=`` (a
+    ``repro.core.RegistrationOptions``); the legacy keyword arguments still
+    work through a deprecation shim and produce bit-identical results.
+    ``mode``/``impl``/``grad_impl`` default to ``"auto"``: the autotuned
+    fastest BSI forward x adjoint pair for the finest-level grid under the
+    chosen ``similarity``'s forward+backward workload (``grad_impl`` selects
+    between XLA autodiff and the analytic gather-only custom VJP — see
+    ``repro.core.interpolate``).  ``compute_dtype`` (e.g. ``"bfloat16"``)
+    runs BSI + warp in reduced precision with fp32 params and adjoint
+    accumulation.  ``similarity`` is a registered name (``"ssd" | "ncc" |
+    "lncc" | "nmi"`` — NMI being the multi-modal NiftyReg path) or a
+    ``(warped, fixed) -> scalar`` loss callable (lower = better; see
+    ``repro.core.similarity``).  ``stop`` (a ``ConvergenceConfig``, see
+    ``repro.engine.convergence``) replaces each level's fixed-``iters`` scan
+    with an early-stopped ``lax.while_loop`` (``stop.max_iters`` defaults to
+    ``iters``); the result's ``steps`` then lists the Adam steps each level
+    actually ran.
     """
     fixed = jnp.asarray(fixed, jnp.float32)
     moving = jnp.asarray(moving, jnp.float32)
-    tile = tuple(int(t) for t in tile)
-    sim_key, _ = resolve_similarity(similarity)
-    compute_dtype = (jnp.dtype(compute_dtype).name
-                     if compute_dtype is not None else None)
-    stop = check_stop(stop, iters)
-    mode, impl, grad_impl = resolve_bsi(
-        mode, impl, ffd.grid_shape_for_volume(fixed.shape, tile), tile,
-        grad_impl=grad_impl,  # the adjoint axis is tuned jointly
-        measure_grad=True,  # the loop's workload is forward+backward BSI
-        similarity=sim_key,  # ... and its backward mix is per-similarity
-        compute_dtype=compute_dtype)  # ... measured/cached per dtype
+    opts = merge_legacy_options(
+        "ffd_register", options,
+        dict(tile=tile, levels=levels, iters=iters, lr=lr,
+             bending_weight=bending_weight, mode=mode, impl=impl,
+             grad_impl=grad_impl, compute_dtype=compute_dtype,
+             similarity=similarity, stop=stop))
+    opts = resolve_options(opts, fixed.shape)  # autotune + canonicalise
+    tile, stop = opts.tile, opts.stop
 
     pyramid = [(fixed, moving)]
-    for _ in range(levels - 1):
+    for _ in range(opts.levels - 1):
         f, m = pyramid[-1]
         pyramid.append((downsample2(f), downsample2(m)))
     pyramid = pyramid[::-1]  # coarse -> fine
 
-    bsi_fn = functools.partial(ffd.dense_field, mode=mode, impl=impl)
+    bsi_fn = functools.partial(ffd.dense_field, mode=opts.mode,
+                               impl=opts.impl)
     phi = None
     losses = []
     steps = [] if stop is not None else None
@@ -206,9 +226,7 @@ def ffd_register(
         else:
             phi = ffd.upsample_grid(phi, gshape)
 
-        runner = _ffd_level_runner(f.shape, tile, int(iters), float(lr),
-                                   float(bending_weight), mode, impl,
-                                   grad_impl, compute_dtype, sim_key, stop)
+        runner = _ffd_level_runner(f.shape, opts)
         out = runner(phi, jnp.zeros_like(phi), jnp.zeros_like(phi), f, m)
         phi, trace = out[:2]
         if stop is not None:
@@ -226,7 +244,7 @@ def ffd_register(
                 dense(phi).block_until_ready()
             # 2 BSI evaluations per optimisation step (forward + grad),
             # scaled by the steps this level actually ran.
-            ran = steps[-1] if stop is not None else iters
+            ran = steps[-1] if stop is not None else opts.iters
             bsi_seconds = (time.perf_counter() - t1) / reps * ran * 2
 
     disp = bsi_fn(phi, tile, fixed.shape)

@@ -6,17 +6,22 @@ pairs register in one jitted program (``engine.batch.register_batch``), a
 benchmark-and-cache autotuner that picks the fastest BSI form per
 configuration instead of hardcoded defaults (``engine.autotune``),
 mesh-sharded data-parallel serving that places the batch axis over a device
-pod (``engine.shard``, via ``register_batch(..., mesh=...)``), and
+pod (``engine.shard``, via ``register_batch(..., mesh=...)``),
 convergence-aware early stopping so easy pairs stop paying for BSI work
-they no longer need (``engine.convergence``, via ``stop=``).
+they no longer need (``engine.convergence``, via ``stop=``), and a
+continuous-batching request scheduler that splices queued pairs into lanes
+freed by the convergence mask (``engine.serve``).
 """
 from repro.engine.autotune import (BsiChoice, autotune_bsi,
                                    default_candidates, default_grad_impls,
-                                   resolve_bsi)
+                                   resolve_bsi, resolve_options)
 from repro.engine.batch import (BatchRegistrationResult, ffd_pipeline,
                                 register_batch)
 from repro.engine.convergence import ConvergenceConfig, adam_until
 from repro.engine.loop import adam_scan, make_adam_runner
+from repro.engine.serve import (AsyncRegistrationService, QueueFull,
+                                RegistrationScheduler, RegistrationTimeout,
+                                ServeResult, ServeStats)
 from repro.engine.shard import make_registration_mesh, sharded_pipeline
 
 __all__ = [
@@ -25,6 +30,7 @@ __all__ = [
     "default_candidates",
     "default_grad_impls",
     "resolve_bsi",
+    "resolve_options",
     "BatchRegistrationResult",
     "ffd_pipeline",
     "register_batch",
@@ -32,6 +38,12 @@ __all__ = [
     "adam_until",
     "adam_scan",
     "make_adam_runner",
+    "AsyncRegistrationService",
+    "QueueFull",
+    "RegistrationScheduler",
+    "RegistrationTimeout",
+    "ServeResult",
+    "ServeStats",
     "make_registration_mesh",
     "sharded_pipeline",
 ]

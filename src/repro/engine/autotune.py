@@ -18,6 +18,7 @@ through untouched and only tunes the ``"auto"`` axes.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 import time
@@ -30,8 +31,8 @@ from repro.core.interpolate import GRAD_IMPLS, MODES, interpolate
 from repro.core.similarity import resolve_similarity, similarity_token
 from repro.kernels.ops import PALLAS_MODES
 
-__all__ = ["BsiChoice", "autotune_bsi", "resolve_bsi", "default_candidates",
-           "default_grad_impls", "default_cache_path"]
+__all__ = ["BsiChoice", "autotune_bsi", "resolve_bsi", "resolve_options",
+           "default_candidates", "default_grad_impls", "default_cache_path"]
 
 JNP_CANDIDATES = tuple((m, "jnp") for m in sorted(MODES))
 PALLAS_CANDIDATES = tuple((m, "pallas") for m in PALLAS_MODES)
@@ -341,3 +342,34 @@ def resolve_bsi(mode, impl, grid_shape, tile, channels=3, *, grad_impl=None,
     choice = autotune_bsi(grid_shape, tile, channels,
                           candidates=cands, **tune_kwargs)
     return choice.mode, choice.impl, choice.grad_impl
+
+
+@functools.lru_cache(maxsize=256)
+def resolve_options(options, vol_shape):
+    """Resolve a ``RegistrationOptions`` for a concrete volume shape.
+
+    The options-first face of the tuner: canonicalises the options
+    (:meth:`RegistrationOptions.normalized` — similarity key, resolved
+    ``stop``) and autotunes any ``"auto"`` BSI axis for the grid this volume
+    implies, returning a fully-concrete copy.  ``lru_cache``d on
+    ``(options, vol_shape)`` — the ``RegistrationOptions`` instance IS the
+    autotune cache key, the same object the compiled-runner caches and the
+    serving buckets key on, so one validated configuration maps to one
+    tuning decision everywhere.
+    """
+    from repro.core import ffd
+    from repro.core.options import RegistrationOptions
+
+    if not isinstance(options, RegistrationOptions):
+        raise TypeError(
+            f"resolve_options expects a RegistrationOptions, got {options!r}")
+    opts = options.normalized()
+    vol_shape = tuple(int(s) for s in vol_shape)
+    mode, impl, grad_impl = resolve_bsi(
+        opts.mode, opts.impl,
+        ffd.grid_shape_for_volume(vol_shape, opts.tile), opts.tile,
+        grad_impl=opts.grad_impl,  # the adjoint axis is tuned jointly
+        measure_grad=True,  # the loop's workload is forward+backward BSI
+        similarity=opts.similarity,  # ... its backward mix is per-similarity
+        compute_dtype=opts.compute_dtype)  # ... measured/cached per dtype
+    return opts.replace(mode=mode, impl=impl, grad_impl=grad_impl)

@@ -7,9 +7,14 @@ pure traced function of ``(fixed, moving)``.  That purity is the point: it
 pairs in ONE jitted program — no Python-loop dispatch anywhere, and XLA is
 free to batch every BSI expansion, gradient, and Adam update across pairs.
 
-Compiled programs are cached per configuration (shapes x hyperparameters),
-so a serving loop pays one compile per volume geometry and then runs
-back-to-back batches at device speed.
+Compiled programs are cached per configuration (shapes x
+``RegistrationOptions``), so a serving loop pays one compile per volume
+geometry and then runs back-to-back batches at device speed.  For the
+continuous-batching scheduler (``engine.serve``) this module also provides
+the *resumable* form: ``compile_level_chunk`` runs a fixed-width lane array
+through ``chunk`` masked Adam steps of one pyramid level and hands the whole
+optimiser state back to the host, so converged lanes can be spliced out and
+queued pairs spliced in between chunks.
 """
 from __future__ import annotations
 
@@ -22,12 +27,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ffd
+from repro.core.options import UNSET, merge_legacy_options
 from repro.core.similarity import resolve_similarity
-from repro.engine.convergence import adam_until, check_stop
+from repro.engine.convergence import adam_until, level_live, plateau_step
 from repro.engine.loop import adam_scan
 
 __all__ = ["BatchRegistrationResult", "ffd_level_loss", "ffd_pipeline",
-           "register_batch"]
+           "register_batch", "level_vol_shapes", "compile_level_chunk",
+           "compile_level_init", "compile_level_splice", "compile_finish"]
 
 
 @dataclasses.dataclass
@@ -124,58 +131,65 @@ def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
 
 
 @functools.lru_cache(maxsize=32)
-def _compiled_batch(vol_shape, tile, levels, iters, lr, bending_weight,
-                    mode, impl, grad_impl, compute_dtype, similarity,
-                    mesh=None, stop=None):
-    """One compiled program per (configuration, mesh) — ``mesh`` is part of
-    the cache key (``jax.sharding.Mesh`` hashes by devices + axis names), so
-    single-device and pod-sharded callers never collide, and two meshes over
-    the same devices share a compile.  ``stop`` (a frozen, hashable
-    ``ConvergenceConfig`` or None) is part of the key too: the early-stopped
-    while-loop program and the fixed-length scan program are different
-    programs."""
+def _compiled_batch(vol_shape, options, mesh=None):
+    """One compiled program per (shape, options, mesh).
+
+    ``options`` is a *resolved* ``RegistrationOptions`` (concrete
+    mode/impl/grad_impl, canonical similarity key, resolved ``stop``) — the
+    sole configuration cache key.  ``mesh`` is part of the key too
+    (``jax.sharding.Mesh`` hashes by devices + axis names), so single-device
+    and pod-sharded callers never collide, and two meshes over the same
+    devices share a compile.  The early-stopped while-loop program and the
+    fixed-length scan program differ through ``options.stop``."""
     del vol_shape  # cache key only; jax re-traces on new shapes anyway
+    o = options
     if mesh is not None:
         from repro.engine.shard import compile_sharded_batch
 
-        return compile_sharded_batch(mesh, tile, levels, iters, lr,
-                                     bending_weight, mode, impl, similarity,
-                                     grad_impl=grad_impl,
-                                     compute_dtype=compute_dtype, stop=stop)
+        return compile_sharded_batch(mesh, o.tile, o.levels, o.iters, o.lr,
+                                     o.bending_weight, o.mode, o.impl,
+                                     o.similarity, grad_impl=o.grad_impl,
+                                     compute_dtype=o.compute_dtype,
+                                     stop=o.stop)
 
     def single(f, m):
-        return ffd_pipeline(f, m, tile=tile, levels=levels, iters=iters,
-                            lr=lr, bending_weight=bending_weight,
-                            mode=mode, impl=impl, grad_impl=grad_impl,
-                            compute_dtype=compute_dtype,
-                            similarity=similarity, stop=stop)
+        return ffd_pipeline(f, m, tile=o.tile, levels=o.levels,
+                            iters=o.iters, lr=o.lr,
+                            bending_weight=o.bending_weight,
+                            mode=o.mode, impl=o.impl, grad_impl=o.grad_impl,
+                            compute_dtype=o.compute_dtype,
+                            similarity=o.similarity, stop=o.stop)
 
     return jax.jit(jax.vmap(single))
 
 
-def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
-                   lr=0.5, bending_weight=5e-3, mode="auto", impl="auto",
-                   grad_impl="auto", compute_dtype=None, similarity="ssd",
-                   mesh=None, stop=None):
+def register_batch(fixed, moving, *, options=None, tile=UNSET, levels=UNSET,
+                   iters=UNSET, lr=UNSET, bending_weight=UNSET, mode=UNSET,
+                   impl=UNSET, grad_impl=UNSET, compute_dtype=UNSET,
+                   similarity=UNSET, mesh=None, stop=UNSET):
     """Register a batch of volume pairs in a single jitted program.
 
     Args:
       fixed, moving: ``(B, X, Y, Z)`` stacks of volume pairs (B >= 1).
-      Remaining args as ``core.registration.ffd_register``;
-      ``mode``/``impl``/``grad_impl`` default to ``"auto"`` — the
-      ``engine.autotune`` winner for this ``(grid_shape, tile)`` under the
-      chosen ``similarity``'s joint forward+backward workload (the adjoint
-      axis picks between XLA autodiff and the analytic gather-only custom
-      VJP).  ``compute_dtype`` (e.g. ``"bfloat16"``) runs BSI + warp in
-      reduced precision with fp32 params/adjoint accumulation.
-      ``similarity`` is a registered name (``"ssd" | "ncc" | "lncc" |
-      "nmi"``) or a loss callable.
+      options: a ``repro.core.RegistrationOptions`` — the preferred way to
+        configure the run; the remaining keyword arguments are the legacy
+        per-field spelling (as ``core.registration.ffd_register``), kept
+        working through a deprecation shim and bit-identical to the
+        equivalent ``options=``.  ``mode``/``impl``/``grad_impl`` default to
+        ``"auto"`` — the ``engine.autotune`` winner for this ``(grid_shape,
+        tile)`` under the chosen ``similarity``'s joint forward+backward
+        workload (the adjoint axis picks between XLA autodiff and the
+        analytic gather-only custom VJP).  ``compute_dtype`` (e.g.
+        ``"bfloat16"``) runs BSI + warp in reduced precision with fp32
+        params/adjoint accumulation.  ``similarity`` is a registered name
+        (``"ssd" | "ncc" | "lncc" | "nmi"``) or a loss callable.
       mesh: optional ``jax.sharding.Mesh`` (see
         ``engine.shard.make_registration_mesh``) — the batch axis shards
         over the mesh's data axes (``REGISTRATION_RULES``), one program
         serving all devices.  Non-divisible batches are padded (repeating
         the last pair) and stripped on return, so results are identical to
-        the unsharded path for any B.
+        the unsharded path for any B.  Deliberately *not* an options field:
+        it names physical devices, so it would poison option-keyed caches.
       stop: optional ``ConvergenceConfig`` — run each pyramid level as an
         early-stopped ``lax.while_loop`` instead of a fixed-``iters`` scan
         (``stop.max_iters`` defaults to ``iters``).  Converged pairs (and
@@ -205,24 +219,20 @@ def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
             "(fixed, moving) pair")
     if fixed.shape != moving.shape:
         raise ValueError(f"shape mismatch: {fixed.shape} vs {moving.shape}")
-    tile = tuple(int(t) for t in tile)
-    sim_key, _ = resolve_similarity(similarity)
-    compute_dtype = (jnp.dtype(compute_dtype).name
-                     if compute_dtype is not None else None)
-    stop = check_stop(stop, iters)
+    opts = merge_legacy_options(
+        "register_batch", options,
+        dict(tile=tile, levels=levels, iters=iters, lr=lr,
+             bending_weight=bending_weight, mode=mode, impl=impl,
+             grad_impl=grad_impl, compute_dtype=compute_dtype,
+             similarity=similarity, stop=stop))
 
-    from repro.engine.autotune import resolve_bsi
+    from repro.engine.autotune import resolve_options
 
     # NOTE: the autotune workload pins stop=None — the winner is measured on
     # the fixed-iteration forward+backward BSI step, which is exactly the
     # per-step work an early-stopped loop runs (stopping changes how many
     # steps execute, never which kernel each step should use).
-    mode, impl, grad_impl = resolve_bsi(
-        mode, impl, ffd.grid_shape_for_volume(fixed.shape[1:], tile), tile,
-        grad_impl=grad_impl,  # the adjoint axis is tuned jointly
-        measure_grad=True,  # the loop's workload is forward+backward BSI
-        similarity=sim_key,  # ... and its backward mix is per-similarity
-        compute_dtype=compute_dtype)  # ... measured/cached per dtype
+    opts = resolve_options(opts, fixed.shape[1:])
 
     t0 = time.perf_counter()
     b = fixed.shape[0]
@@ -232,10 +242,9 @@ def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
         fixed, b = pad_batch(fixed, batch_multiple(mesh))
         moving, _ = pad_batch(moving, batch_multiple(mesh))
     misses = _compiled_batch.cache_info().misses
-    fn = _compiled_batch(fixed.shape[1:], tile, levels, iters, float(lr),
-                         float(bending_weight), mode, impl, grad_impl,
-                         compute_dtype, sim_key, mesh, stop)
+    fn = _compiled_batch(fixed.shape[1:], opts, mesh)
     compiled = _compiled_batch.cache_info().misses > misses
+    stop = opts.stop
     out = fn(fixed, moving)
     warped, phi, losses = out[:3]
     steps = out[3] if stop is not None else None
@@ -246,3 +255,147 @@ def register_batch(fixed, moving, *, tile=(5, 5, 5), levels=2, iters=40,
         steps = steps[:b] if steps is not None else None
     return BatchRegistrationResult(warped, phi, losses, seconds,
                                    compiled=compiled, steps=steps)
+
+
+# ---------------------------------------------------------------------------
+# Resumable chunked execution — the continuous-batching substrate.
+#
+# ``register_batch`` runs each pyramid level to completion inside one
+# program, so a new pair can only join at batch boundaries.  The serving
+# scheduler (``engine.serve``) instead drives each level in fixed-size
+# *chunks* of masked Adam steps over a fixed-width lane array: after every
+# chunk the full optimiser state returns to the host, converged lanes are
+# harvested and queued pairs spliced into the freed slots.  The per-step
+# arithmetic is ``engine.convergence.plateau_step`` — the exact body of
+# ``adam_until`` — so a lane's trajectory is step-for-step identical to the
+# uninterrupted while-loop no matter how chunks and lane recycling slice it.
+# ---------------------------------------------------------------------------
+
+
+def level_vol_shapes(vol_shape, levels):
+    """Per-level volume shapes, coarse -> fine (``downsample2`` geometry)."""
+    shapes = [tuple(int(s) for s in vol_shape)]
+    for _ in range(int(levels) - 1):
+        shapes.append(tuple((s - s % 2) // 2 for s in shapes[-1]))
+    return shapes[::-1]
+
+
+def _lane_vg(f, m, options):
+    o = options
+    return jax.value_and_grad(ffd_level_loss(
+        f, m, tile=o.tile, bending_weight=o.bending_weight, mode=o.mode,
+        impl=o.impl, grad_impl=o.grad_impl, compute_dtype=o.compute_dtype,
+        similarity=o.similarity))
+
+
+@functools.lru_cache(maxsize=128)
+def compile_level_init(lvl_shape, options):
+    """Jitted per-pair lane-state initialiser for one pyramid level.
+
+    ``(phi0, fixed, moving) -> state`` with ``fixed``/``moving`` already at
+    this level's resolution (``lvl_shape``) and ``phi0`` the level's starting
+    grid (zeros at the coarsest level, the upsampled previous-level grid
+    after a migration).  The returned state leaves are unbatched — the
+    scheduler splices them into lane ``i`` of its stacked arrays with
+    ``jax.tree.map(lambda a, s: a.at[i].set(s), state, lane)``.  Matches
+    ``adam_until``'s init exactly: the gradient at ``phi0`` seeds step 1 and
+    the initial loss seeds the best-so-far (so a pair the optimiser can only
+    make worse retires with its starting params).
+    """
+    del lvl_shape  # cache key only; jit re-traces on new shapes anyway
+    return jax.jit(functools.partial(_lane_init, options=options))
+
+
+def _lane_init(phi, f, m, *, options):
+    loss0, g0 = _lane_vg(f, m, options)(phi)
+    z = jnp.zeros_like(phi)
+    i0 = jnp.zeros((), jnp.int32)
+    loss0 = loss0.astype(jnp.float32)
+    return dict(phi=phi, m=z, v=z, g=g0, k=i0, since=i0, best=loss0,
+                best_p=phi, loss=loss0, active=jnp.ones((), jnp.bool_))
+
+
+@functools.lru_cache(maxsize=128)
+def compile_level_splice(lvl_shape, options):
+    """Jitted lane admission: init one pair AND scatter it into lane ``i``.
+
+    ``(state, F, M, i, phi0, f, m) -> (state, F, M)`` — the fused form of
+    ``compile_level_init`` + a per-leaf ``.at[i].set``: one program dispatch
+    admits a pair, where leaf-by-leaf host splicing would pay ~a dozen
+    dispatches (profiled at ~10ms/admission on CPU, a third of the serving
+    wall-clock at small volume sizes).  The stacked operands are donated on
+    accelerator backends — the scheduler threads them through every call.
+    """
+    del lvl_shape  # cache key only
+
+    def splice(state, F, M, i, phi, f, m):
+        lane = _lane_init(phi, f, m, options=options)
+        state = {k: state[k].at[i].set(lane[k]) for k in state}
+        return state, F.at[i].set(f), M.at[i].set(m)
+
+    donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
+    return jax.jit(splice, donate_argnums=donate)
+
+
+@functools.lru_cache(maxsize=128)
+def compile_level_chunk(lvl_shape, options, chunk):
+    """Jitted ``(state, fixed, moving) -> state``: one chunk of a level.
+
+    Runs ``chunk`` masked Adam steps over a ``(W, ...)`` lane array at this
+    level's resolution.  Each step re-evaluates every lane's liveness —
+    ``active`` (the slot holds a real pair) AND ``level_live`` (budget left,
+    patience window open, exactly ``adam_until``'s ``cond``) — and freezes
+    dead lanes by selecting their old state, the same per-lane masking the
+    ``while_loop`` batching rule applies.  A lane retired mid-chunk
+    therefore holds exactly its solo-run result when the state returns to
+    the host, and a freshly spliced lane starts its trajectory wherever the
+    chunk boundary fell.  The state argument is donated on accelerator
+    backends (the scheduler threads it through every call).
+
+    With ``options.stop`` unset the masking reduces to the fixed-``iters``
+    budget and ``tol=-inf`` makes every step "improve", so ``best_p`` tracks
+    the current params and the result matches ``adam_scan``.
+    """
+    del lvl_shape  # cache key only
+    o = options
+    stop = o.stop
+    tol = jnp.float32(stop.tol) if stop is not None else -jnp.inf
+
+    def lane(state, f, m):
+        vg = _lane_vg(f, m, o)
+
+        def one(s, _):
+            live = jnp.logical_and(
+                s["active"],
+                level_live(s["k"], s["since"], stop=stop, iters=o.iters))
+            k, p, am, av, g, loss, since, best, best_p = plateau_step(
+                vg, s["k"], s["phi"], s["m"], s["v"], s["g"], s["since"],
+                s["best"], s["best_p"], tol=tol, lr=o.lr)
+            new = dict(phi=p, m=am, v=av, g=g, k=k, since=since, best=best,
+                       best_p=best_p, loss=loss, active=s["active"])
+            return {key: jnp.where(live, new[key], s[key])
+                    for key in new}, None
+
+        s, _ = jax.lax.scan(one, state, None, length=int(chunk))
+        return s
+
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(jax.vmap(lane), donate_argnums=donate)
+
+
+@functools.lru_cache(maxsize=64)
+def compile_finish(vol_shape, options):
+    """Jitted ``(phi, moving) -> warped``: finest grid -> registered volume.
+
+    The same final expansion+warp as ``ffd_pipeline`` (full-resolution BSI of
+    the finest-level control grid, then one trilinear warp of the original
+    moving volume).
+    """
+    o = options
+
+    def fin(phi, moving):
+        disp = ffd.dense_field(phi, o.tile, vol_shape, mode=o.mode,
+                               impl=o.impl, grad_impl=o.grad_impl)
+        return ffd.warp_volume(moving, disp)
+
+    return jax.jit(fin)

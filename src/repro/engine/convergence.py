@@ -36,7 +36,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ConvergenceConfig", "adam_update", "adam_until", "check_stop"]
+__all__ = ["ConvergenceConfig", "adam_update", "adam_until", "check_stop",
+           "plateau_step", "level_live"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +111,52 @@ def adam_update(p, m, v, g, i, *, lr, b1=0.9, b2=0.999, eps=1e-8):
     return p - lr * mh / (jnp.sqrt(vh) + eps), m, v
 
 
+def plateau_step(vg, k, p, m, v, g, since, best, best_p, *, tol, lr,
+                 b1=0.9, b2=0.999, eps=1e-8):
+    """One resumable optimisation step of the plateau-stopped Adam loop.
+
+    The single source of the per-step arithmetic shared by the
+    run-to-completion ``lax.while_loop`` (:func:`adam_until`) and the
+    chunked/resumable serving loop (``engine.serve`` via
+    ``engine.batch.compile_level_chunk``): apply the Adam update seeded by
+    the carried gradient ``g``, evaluate ``vg`` at the new params, and fold
+    the best-so-far / patience bookkeeping.  Because the whole step state
+    travels through the arguments, a caller can run any number of steps,
+    hand the state to the host, and resume later — the trajectory is
+    step-for-step identical to an uninterrupted loop.
+
+    Returns ``(k+1, p, m, v, g, loss, since, best, best_p)`` where ``loss``
+    is the post-update loss (the step's trace entry).
+    """
+    i = (k + 1).astype(jnp.float32)  # 1-based bias-correction index
+    p, m, v = adam_update(p, m, v, g, i, lr=lr, b1=b1, b2=b2, eps=eps)
+    loss, g = vg(p)
+    # a step "improves" when it beats the best loss so far by a relative
+    # tol; `since` counts consecutive non-improving steps, and the best
+    # params ride along so stopping never returns a worse point than the
+    # loop already visited
+    gain = (best - loss) / jnp.maximum(jnp.abs(best), jnp.float32(1e-12))
+    improved = gain > tol
+    best_p = jnp.where(improved, p, best_p)
+    best = jnp.where(improved, loss, best)
+    since = jnp.where(improved, 0, since + 1)
+    return k + 1, p, m, v, g, loss, since, best, best_p
+
+
+def level_live(k, since, *, stop, iters=None):
+    """Whether a level's loop would take another step — the scheduler's
+    per-lane retire-and-refill signal.
+
+    Mirrors :func:`adam_until`'s ``cond`` exactly (``stop`` set), or the
+    fixed-``iters`` budget (``stop=None``): a lane is *live* while it has
+    budget left and — under a stopping rule — its patience window is open.
+    """
+    if stop is None:
+        return k < int(iters)
+    return jnp.logical_and(k < int(stop.max_iters),
+                           since < int(stop.patience))
+
+
 def adam_until(loss_fn, params, *, stop, lr, b1=0.9, b2=0.999, eps=1e-8,
                m=None, v=None):
     """Adam as a ``lax.while_loop`` that exits when the loss plateaus.
@@ -158,20 +205,13 @@ def adam_until(loss_fn, params, *, stop, lr, b1=0.9, b2=0.999, eps=1e-8,
 
     def body(carry):
         k, p, m, v, g, trace, since, best, best_p = carry
-        i = (k + 1).astype(jnp.float32)  # 1-based bias-correction index
-        p, m, v = adam_update(p, m, v, g, i, lr=lr, b1=b1, b2=b2, eps=eps)
-        loss, g = vg(p)  # the post-update loss closes slot k of the trace
+        # the shared resumable step (see plateau_step); the post-update loss
+        # closes slot k of the trace
+        k1, p, m, v, g, loss, since, best, best_p = plateau_step(
+            vg, k, p, m, v, g, since, best, best_p,
+            tol=tol, lr=lr, b1=b1, b2=b2, eps=eps)
         trace = jax.lax.dynamic_update_index_in_dim(trace, loss, k, 0)
-        # a step "improves" when it beats the best loss so far by a relative
-        # tol; `since` counts consecutive non-improving steps, and the best
-        # params ride along so stopping never returns a worse point than
-        # the loop already visited
-        gain = (best - loss) / jnp.maximum(jnp.abs(best), jnp.float32(1e-12))
-        improved = gain > tol
-        best_p = jnp.where(improved, p, best_p)
-        best = jnp.where(improved, loss, best)
-        since = jnp.where(improved, 0, since + 1)
-        return k + 1, p, m, v, g, trace, since, best, best_p
+        return k1, p, m, v, g, trace, since, best, best_p
 
     carry = (jnp.zeros((), jnp.int32), params, m, v, g0,
              jnp.zeros((max_iters,), jnp.float32),

@@ -20,6 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.options import UNSET, RegistrationOptions, merge_legacy_options
 from repro.engine.convergence import adam_update, adam_until, check_stop
 
 __all__ = ["adam_scan", "make_adam_runner"]
@@ -63,8 +64,8 @@ def adam_scan(loss_fn, params, *, iters, lr, b1=0.9, b2=0.999, eps=1e-8,
     return p, trace
 
 
-def make_adam_runner(loss_builder, *, iters, lr, b1=0.9, b2=0.999, eps=1e-8,
-                     donate=None, stop=None):
+def make_adam_runner(loss_builder, *, options=None, iters=UNSET, lr=UNSET,
+                     b1=0.9, b2=0.999, eps=1e-8, donate=None, stop=UNSET):
     """Build a jitted ``(params, m, v, *data) -> ...`` runner.
 
     ``loss_builder(*data)`` returns the scalar loss function of the params;
@@ -73,14 +74,29 @@ def make_adam_runner(loss_builder, *, iters, lr, b1=0.9, b2=0.999, eps=1e-8,
     call.  ``(params, m, v)`` are donated unless ``donate=False`` (donation
     is skipped on CPU, where XLA cannot honour it and only warns).
 
-    With ``stop=None`` the runner is the fixed-length scan and returns
-    ``(params, trace)``.  With a resolved ``ConvergenceConfig`` it runs
+    The loop hyperparameters come from ``options=`` (a
+    ``repro.core.RegistrationOptions`` — only its ``iters`` / ``lr`` /
+    ``stop`` fields apply here); the legacy ``iters=`` / ``lr=`` / ``stop=``
+    keywords still work via the deprecation shim.  ``b1``/``b2``/``eps`` and
+    ``donate`` are loop-level knobs outside the options object.
+
+    With no stopping rule the runner is the fixed-length scan and returns
+    ``(params, trace)``.  With a ``ConvergenceConfig`` it runs
     ``adam_until`` instead and returns ``(params, trace, steps_taken)`` —
     the trace padded to ``stop.max_iters`` (see ``engine.convergence``).
     """
+    if options is None and (iters is UNSET or lr is UNSET):
+        raise TypeError(
+            "make_adam_runner needs options=RegistrationOptions(...) or the "
+            "legacy iters=/lr= keywords")
+    opts = merge_legacy_options(
+        "make_adam_runner", options,
+        dict(iters=iters, lr=lr, stop=stop),
+        defaults=RegistrationOptions())
+    iters, lr = opts.iters, opts.lr
     if donate is None:
         donate = jax.default_backend() != "cpu"
-    stop = check_stop(stop, iters)
+    stop = check_stop(opts.stop, iters)
 
     def run(p, m, v, *data):
         loss_fn = loss_builder(*data)

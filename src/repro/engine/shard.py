@@ -42,6 +42,7 @@ __all__ = [
     "batch_multiple",
     "pad_batch",
     "batch_mask",
+    "lane_sharding",
     "sharded_pipeline",
     "compile_sharded_batch",
 ]
@@ -110,6 +111,22 @@ def batch_mask(orig_b, padded_b):
     loss/quality statistics without a host round-trip).
     """
     return jnp.arange(int(padded_b)) < int(orig_b)
+
+
+def lane_sharding(mesh):
+    """The batch-over-data ``NamedSharding`` for a leading lane/batch axis.
+
+    Used as a pytree-prefix placement: ``jax.device_put(state,
+    lane_sharding(mesh))`` shards every leaf of a lane-array state dict
+    (``engine.batch.compile_level_chunk``'s operand) along its leading lane
+    axis, replicating everything per-lane — the same placement
+    ``REGISTRATION_RULES`` gives ``register_batch``'s batch axis, so the
+    serving scheduler's chunked loop and the monolithic sharded pipeline
+    distribute identically.  Lane widths should be a multiple of
+    ``batch_multiple(mesh)`` for an even split.
+    """
+    return NamedSharding(mesh, REGISTRATION_RULES(mesh.axis_names).spec(
+        ("batch",)))
 
 
 def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,

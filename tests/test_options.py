@@ -1,0 +1,228 @@
+"""RegistrationOptions: validation, hashability, and the deprecation shim.
+
+The API-consolidation contract (PR 6): every entry point configures through
+one frozen ``RegistrationOptions``; the legacy keyword spelling still works,
+warns once per call site, and produces *bit-identical* results (both paths
+build the same options object, hence hit the same compiled-runner cache).
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.options import (UNSET, RegistrationOptions,
+                                _reset_deprecation_registry,
+                                merge_legacy_options)
+from repro.engine.convergence import ConvergenceConfig
+
+SHAPE = (18, 16, 14)
+
+
+def _pair(seed=0):
+    rng = np.random.default_rng(seed)
+    f = rng.normal(size=SHAPE).astype(np.float32)
+    return f, np.roll(f, 1, axis=0)
+
+
+SMALL = dict(tile=(6, 6, 6), levels=2, iters=4, lr=0.1,
+             mode="separable", impl="jnp", grad_impl="xla")
+
+
+class TestValidation:
+    def test_defaults_match_legacy_ffd_signature(self):
+        o = RegistrationOptions()
+        assert (o.tile, o.levels, o.iters, o.lr) == ((5, 5, 5), 2, 40, 0.5)
+        assert o.bending_weight == 5e-3
+        assert (o.mode, o.impl, o.grad_impl) == ("auto", "auto", "auto")
+        assert o.similarity == "ssd" and o.stop is None
+
+    def test_tile_coerced_to_int_tuple(self):
+        assert RegistrationOptions(tile=[6.0, 5, 4]).tile == (6, 5, 4)
+
+    @pytest.mark.parametrize("bad", [
+        dict(tile=(5, 5)), dict(tile=(5, 5, 0)), dict(levels=0),
+        dict(iters=0), dict(lr=0.0), dict(lr=-1.0),
+        dict(bending_weight=-1e-3),
+    ])
+    def test_value_errors(self, bad):
+        with pytest.raises(ValueError):
+            RegistrationOptions(**bad)
+
+    @pytest.mark.parametrize("bad", [
+        dict(mode="nope"), dict(impl="cuda"), dict(grad_impl="nope"),
+    ])
+    def test_backend_name_errors(self, bad):
+        with pytest.raises(ValueError):
+            RegistrationOptions(**bad)
+
+    def test_stop_type_error(self):
+        with pytest.raises(TypeError):
+            RegistrationOptions(stop=1e-4)  # the classic tol-not-config slip
+
+    def test_similarity_type_error(self):
+        with pytest.raises(TypeError):
+            RegistrationOptions(similarity=3)
+
+    def test_compute_dtype_canonicalised(self):
+        assert RegistrationOptions(
+            compute_dtype=jnp.bfloat16).compute_dtype == "bfloat16"
+
+    def test_hashable_and_cache_key_worthy(self):
+        a = RegistrationOptions(tile=(6, 6, 6), stop=ConvergenceConfig())
+        b = RegistrationOptions(tile=[6, 6, 6], stop=ConvergenceConfig())
+        assert a == b and hash(a) == hash(b)
+        assert len({a: 1, b: 2}) == 1
+
+    def test_normalized_resolves_similarity_and_stop(self):
+        from repro.core.similarity import resolve_similarity
+
+        _, ssd = resolve_similarity("ssd")
+        o = RegistrationOptions(similarity=ssd, iters=7,
+                                stop=ConvergenceConfig()).normalized()
+        assert o.similarity == "ssd"          # callable -> registry key
+        assert o.stop.max_iters == 7          # inherits iters
+
+    def test_for_affine_pins_ffd_fields(self):
+        o = RegistrationOptions(tile=(9, 9, 9), levels=3, iters=5,
+                                lr=0.02, compute_dtype="bfloat16")
+        a = o.for_affine()
+        base = RegistrationOptions()
+        assert (a.iters, a.lr) == (5, 0.02)   # affine-relevant fields kept
+        assert a.tile == base.tile and a.levels == base.levels
+        assert a.compute_dtype is None
+
+
+class TestDeprecationShim:
+    def test_mixing_options_and_kwargs_raises(self):
+        with pytest.raises(TypeError, match="not both"):
+            merge_legacy_options("fn", RegistrationOptions(),
+                                 dict(iters=3, lr=UNSET))
+
+    def test_non_options_object_raises(self):
+        with pytest.raises(TypeError, match="RegistrationOptions"):
+            merge_legacy_options("fn", {"iters": 3}, dict(iters=UNSET))
+
+    def test_options_pass_through_unwarned(self):
+        o = RegistrationOptions(iters=3)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert merge_legacy_options(
+                "fn", o, dict(iters=UNSET, lr=UNSET)) is o
+
+    def test_warns_once_per_call_site(self):
+        _reset_deprecation_registry()
+
+        def call_site():
+            return merge_legacy_options("fn", None,
+                                        dict(iters=3, lr=UNSET),
+                                        stacklevel=2)
+
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            for _ in range(3):
+                call_site()                   # one site, three calls
+            merge_legacy_options("fn", None, dict(iters=3, lr=UNSET),
+                                 stacklevel=2)  # a second, distinct site
+        deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+        assert len(deps) == 2
+        assert "iters" in str(deps[0].message)
+
+    def test_make_adam_runner_requires_a_config(self):
+        from repro.engine.loop import make_adam_runner
+
+        with pytest.raises(TypeError, match="options=RegistrationOptions"):
+            make_adam_runner(lambda: None)
+        # either spelling satisfies it (legacy path warns as usual)
+        make_adam_runner(lambda: None,
+                         options=RegistrationOptions(iters=2, lr=0.1))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            make_adam_runner(lambda: None, iters=2, lr=0.1)
+
+    def test_legacy_kwargs_overlay_defaults(self):
+        _reset_deprecation_registry()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            o = merge_legacy_options(
+                "fn", None, dict(iters=9, lr=UNSET),
+                defaults=RegistrationOptions(iters=60, lr=0.02))
+        assert (o.iters, o.lr) == (9, 0.02)
+
+
+class TestBitwiseEquivalence:
+    """kwarg path == options path, bit for bit (they share one program)."""
+
+    def test_ffd_register(self):
+        from repro.core.registration import ffd_register
+
+        f, m = _pair()
+        _reset_deprecation_registry()
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            legacy = ffd_register(f, m, **SMALL)
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+        viaopts = ffd_register(f, m, options=RegistrationOptions(**SMALL))
+        assert np.array_equal(np.asarray(legacy.warped),
+                              np.asarray(viaopts.warped))
+        assert np.array_equal(np.asarray(legacy.params),
+                              np.asarray(viaopts.params))
+        assert legacy.losses == viaopts.losses
+
+    def test_ffd_register_with_stop(self):
+        from repro.core.registration import ffd_register
+
+        f, m = _pair(1)
+        stop = ConvergenceConfig(tol=3e-4, patience=3)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            legacy = ffd_register(f, m, stop=stop, **SMALL)
+        viaopts = ffd_register(
+            f, m, options=RegistrationOptions(stop=stop, **SMALL))
+        assert legacy.steps == viaopts.steps
+        assert np.array_equal(np.asarray(legacy.warped),
+                              np.asarray(viaopts.warped))
+
+    def test_affine_register(self):
+        from repro.core.registration import affine_register
+
+        f, m = _pair(2)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            legacy = affine_register(f, m, iters=4, lr=0.01)
+        viaopts = affine_register(
+            f, m, options=RegistrationOptions(iters=4, lr=0.01))
+        assert np.array_equal(np.asarray(legacy.warped),
+                              np.asarray(viaopts.warped))
+        assert legacy.losses == viaopts.losses
+
+    def test_register_batch(self):
+        from repro.engine.batch import register_batch
+
+        f0, m0 = _pair(3)
+        f1, m1 = _pair(4)
+        F, M = np.stack([f0, f1]), np.stack([m0, m1])
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            legacy = register_batch(F, M, **SMALL)
+        viaopts = register_batch(F, M, options=RegistrationOptions(**SMALL))
+        assert np.array_equal(np.asarray(legacy.warped),
+                              np.asarray(viaopts.warped))
+
+    def test_mixing_raises_at_entry_points(self):
+        from repro.core.registration import ffd_register
+
+        f, m = _pair()
+        with pytest.raises(TypeError, match="not both"):
+            ffd_register(f, m, options=RegistrationOptions(), iters=3)
+
+    def test_options_is_the_cache_key(self):
+        """Same options object -> same compiled level runner (cache hit)."""
+        from repro.core.registration import _ffd_level_runner
+        from repro.engine.autotune import resolve_options
+
+        opts = resolve_options(RegistrationOptions(**SMALL), SHAPE)
+        r1 = _ffd_level_runner(SHAPE, opts)
+        r2 = _ffd_level_runner(SHAPE, resolve_options(
+            RegistrationOptions(**SMALL), SHAPE))
+        assert r1 is r2
