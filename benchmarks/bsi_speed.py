@@ -14,8 +14,17 @@ adjoints are the analytic gather-only custom VJP (``jnp`` separable-
 transpose / ``pallas`` kernel).  The derived column reports the backward-
 path speedup over the same forward under ``xla`` autodiff.
 
+``--fused`` times the full level step per similarity: the fused Pallas
+megakernel (``core.ffd.fused_warp_loss`` — BSI + warp + similarity in one
+VMEM pass, no dense field or warped volume in HBM) against the unfused
+dense-field → warp → similarity composition, forward+backward.  On CPU
+hosts the fused kernel runs in interpret mode, so these rows are a
+correctness-path trajectory, not the TPU speedup story; the derived column
+also reports peak device memory where the backend exposes it.
+
 CSV: name,us_per_call,derived  where derived = ns/voxel | speedup-vs-gather
-(forward sweep) or speedup-vs-xla-autodiff (``--grad`` sweep).
+(forward sweep), speedup-vs-xla-autodiff (``--grad``), or
+speedup-vs-unfused (``--fused``).
 """
 from __future__ import annotations
 
@@ -126,10 +135,65 @@ def run_grad(full=False, volumes=("phantom2", "porcine1"), reps=3, tiles=None,
     return rows
 
 
-def main(full=False, grad=False, **kwargs):
-    rows = run_grad(full, **kwargs) if grad else run(full, **kwargs)
+def run_fused(full=False, volumes=("phantom2",), reps=3, tiles=(5,),
+              vol_table=None, similarities=("ssd", "ncc", "lncc", "nmi")):
+    """Fused vs unfused level-step rows, forward+backward per similarity.
+
+    Each pair of rows times ``jit(grad(...))`` of the same objective — the
+    unfused dense-field → warp → similarity composition and the fused
+    single-pass kernel — on the same volume and grid, so the ``_fused``
+    row's derived column is a direct speedup over its ``_unfused`` sibling.
+    """
+    from benchmarks.common import peak_hbm_bytes
+    from repro.core.similarity import resolve_similarity
+
+    vols = vol_table or (FULL_VOLUMES if full else SCALED_VOLUMES)
+    rows = []
+    for t in tiles:
+        tile = (t, t, t)
+        for sim in similarities:
+            _, sim_fn = resolve_similarity(sim)
+            total_un, total_fu = 0.0, 0.0
+            for name in volumes:
+                vol = vols[name]
+                phi = grid_for(vol, tile)
+                rng = np.random.default_rng(1)
+                mov = jnp.asarray(rng.random(vol), jnp.float32)
+                fix = jnp.asarray(rng.random(vol), jnp.float32)
+
+                def unfused(p, tile=tile, vol=vol, sim_fn=sim_fn,
+                            mov=mov, fix=fix):
+                    d = ffd.dense_field(p, tile, vol)
+                    return sim_fn(ffd.warp_volume(mov, d), fix)
+
+                def fused(p, tile=tile, sim=sim, mov=mov, fix=fix):
+                    return ffd.fused_warp_loss(p, mov, fix, tile,
+                                               similarity=sim)
+
+                total_un += time_fn(jax.jit(jax.grad(unfused)), phi, reps=reps)
+                total_fu += time_fn(jax.jit(jax.grad(fused)), phi, reps=reps)
+            hbm = peak_hbm_bytes()
+            hbm_s = "n/a" if hbm is None else f"{hbm / 2**20:.1f}MiB"
+            n = len(volumes)
+            rows.append((f"bsi_fused/tile{t}/{sim}_unfused",
+                         round(total_un / n * 1e6, 1), "baseline"))
+            rows.append((f"bsi_fused/tile{t}/{sim}_fused",
+                         round(total_fu / n * 1e6, 1),
+                         f"x{total_un / total_fu:.2f}-vs-unfused"
+                         f"|peak_hbm={hbm_s}"))
+    return rows
+
+
+def main(full=False, grad=False, fused=False, **kwargs):
+    if fused:
+        rows = run_fused(full, **kwargs)
+    elif grad:
+        rows = run_grad(full, **kwargs)
+    else:
+        rows = run(full, **kwargs)
     return emit(rows, ["name", "us_per_call", "derived"])
 
 
 if __name__ == "__main__":
-    main(full="--full" in sys.argv, grad="--grad" in sys.argv)
+    main(full="--full" in sys.argv, grad="--grad" in sys.argv,
+         fused="--fused" in sys.argv)

@@ -30,6 +30,22 @@ TINY_VOLUMES = {
 }
 
 
+def peak_hbm_bytes(device=None):
+    """Peak device-memory use in bytes, or None where unreported (CPU).
+
+    Accelerator backends expose allocator counters via
+    ``Device.memory_stats()``; the fused-level-step benchmark rows use this
+    to show the dense field + warped volume never landing in HBM.  XLA:CPU
+    returns no stats — callers print "n/a" rather than fabricating a number.
+    """
+    dev = device if device is not None else jax.local_devices()[0]
+    stats_fn = getattr(dev, "memory_stats", None)
+    stats = stats_fn() if callable(stats_fn) else None
+    if not stats:
+        return None
+    return stats.get("peak_bytes_in_use")
+
+
 def time_fn(fn, *args, reps=5, warmup=2):
     """Median wall time of a jitted fn (blocks on completion)."""
     for _ in range(warmup):

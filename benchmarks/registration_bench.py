@@ -2,10 +2,12 @@
 
 Registers synthetic phantom pairs (repro.data.volumes) with (a) affine only,
 (b) FFD using the baseline ``gather`` BSI, (c) FFD using the optimized
-``separable`` BSI, and (d) FFD using the autotuned BSI (``repro.engine``
-picks the fastest form for this grid/tile) — reporting total time, the BSI
-share (Amdahl argument of paper §6.2) and MAE/SSIM against the fixed volume
-(Table 5 analogue).  The FFD inner loop is the engine's scan-compiled path.
+``separable`` BSI, (d) FFD using the autotuned BSI (``repro.engine``
+picks the fastest form for this grid/tile), and (e) FFD with the fused
+level-step megakernel forced on (``fused="on"``: BSI + warp + similarity in
+one VMEM pass) — reporting total time, the BSI share (Amdahl argument of
+paper §6.2) and MAE/SSIM against the fixed volume (Table 5 analogue).  The
+FFD inner loop is the engine's scan-compiled path.
 
 A multi-modal preset rides along (paper §6's CT↔CBCT case, NiftyReg's NMI
 path): the moving volume gets a monotone intensity remap before
@@ -48,6 +50,7 @@ except ModuleNotFoundError:  # src-layout checkout without install
 from benchmarks.common import emit
 from repro.core import ffd as ffd_mod
 from repro.core import metrics
+from repro.core.options import RegistrationOptions
 from repro.core.registration import affine_register, ffd_register
 from repro.data.volumes import make_pair
 from repro.engine.autotune import resolve_bsi
@@ -109,6 +112,11 @@ def run(shape=(48, 40, 36), iters=25, affine_iters=30, multimodal=True):
                 fixed, moving, tile=TILE, levels=2, iters=iters,
                 mode=mode, impl=impl, measure_bsi_time=True,
             )
+        # fused level step, forced on: the dense field and warped volume
+        # never hit HBM (on CPU hosts the kernel runs in interpret mode —
+        # a correctness-path trajectory row, not the TPU speedup story)
+        fus = ffd_register(fixed, moving, options=RegistrationOptions(
+            tile=TILE, levels=2, iters=iters, fused="on"))
         base = res[("gather", "jnp")]
         opt = res[("separable", "jnp")]
         auto = res[(auto_mode, auto_impl)]
@@ -134,6 +142,11 @@ def run(shape=(48, 40, 36), iters=25, affine_iters=30, multimodal=True):
              f"|ssim={float(metrics.ssim(auto.warped, fixed)):.4f}"
              f"|chosen={auto_mode}/{auto_impl}"
              f"|reg_speedup=x{base.seconds / max(auto.seconds, 1e-9):.2f}"),
+            (f"registration/{name}/ffd_fused",
+             round(fus.seconds * 1e6, 0),
+             f"mae={float(metrics.mae(fus.warped, fixed)):.4f}"
+             f"|ssim={float(metrics.ssim(fus.warped, fixed)):.4f}"
+             f"|reg_speedup=x{base.seconds / max(fus.seconds, 1e-9):.2f}"),
             (f"registration/{name}/pre_registration", 0.0,
              f"mae={pre[0]:.4f}|ssim={pre[1]:.4f}"),
         ]

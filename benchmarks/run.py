@@ -2,6 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV rows for:
   * bsi_speed          — paper Figs. 5-7 (time/voxel + speedup, tile sweep)
+  * bsi_fused          — fused level-step megakernel vs the unfused
+                         composition per similarity (ci preset)
   * bsi_accuracy       — paper Tables 3-4 (error vs float64 reference)
   * registration_bench — paper Figs. 8-9 + Table 5 (FFD time + MAE/SSIM)
   * transfer_model     — paper Appendix A (Eqs. A.1-A.4 transfer counts)
@@ -53,6 +55,11 @@ def _suites(preset):
             ("bsi_grad", lambda: bsi_speed.main(
                 grad=True, tiles=[3, 5], reps=2, vol_table=TINY_VOLUMES,
                 volumes=tuple(TINY_VOLUMES))),
+            # fused level-step megakernel vs the unfused composition per
+            # similarity (ISSUE 7 acceptance rows; interpret-mode on CPU)
+            ("bsi_fused", lambda: bsi_speed.main(
+                fused=True, tiles=[5], reps=2, vol_table=TINY_VOLUMES,
+                volumes=("phantom2",))),
             ("registration_bench", lambda: registration_bench.main(
                 shape=(22, 20, 18), iters=4, affine_iters=10)),
             # convergence-aware serving: steps saved + loss excess of

@@ -7,6 +7,8 @@ displaced coordinates (trilinear image resampling, NiftyReg's default).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -15,6 +17,7 @@ from repro.core.interpolate import interpolate
 __all__ = [
     "grid_shape_for_volume",
     "dense_field",
+    "fused_warp_loss",
     "trilinear_sample",
     "warp_volume",
     "bending_energy",
@@ -72,6 +75,72 @@ def dense_field(phi, tile, vol_shape, *, mode="separable", impl="jnp",
     full = interpolate(phi, tile, mode=mode, impl=impl, grad_impl=grad_impl,
                        dtype=compute_dtype)
     return full[: vol_shape[0], : vol_shape[1], : vol_shape[2]]
+
+
+def fused_warp_loss(phi, moving, fixed, tile, *, similarity="ssd",
+                    mode="separable", impl="jnp", grad_impl="xla",
+                    compute_dtype=None, interpret=None):
+    """``sim(warp(moving, bsi(phi)), fixed)`` without a dense field in HBM.
+
+    The differentiable face of the fused level step: the forward runs the
+    single-pass Pallas kernel (``kernels.ops.fused_similarity_loss`` — BSI
+    displacement + trilinear warp + similarity partial sums per VMEM block),
+    and a ``jax.custom_vjp`` backward recomputes the unfused composition
+    ``dense_field -> warp_volume -> sim`` under ``jax.vjp`` so the gradient
+    flows through PR 4's analytic gather-only adjoint (``grad_impl``) —
+    gradients are therefore *identical* to the unfused path, not merely
+    close.  ``similarity`` must have a fused accumulator
+    (``core.similarity.fused_spec``); custom callables raise.
+
+    ``mode`` / ``impl`` / ``grad_impl`` configure only the backward's
+    recompute (the fused forward has one algorithm); ``compute_dtype``
+    quantises the displacement and the sampled intensities exactly as the
+    unfused pair of knobs does, with fp32 partial-sum accumulation.
+    """
+    from repro.core.similarity import fused_spec
+
+    spec = fused_spec(similarity)
+    if spec is None:
+        raise ValueError(
+            f"similarity {similarity!r} has no fused kernel — custom "
+            "callables must run unfused (fused='off')")
+    cd = None if compute_dtype is None else jnp.dtype(compute_dtype).name
+    f = _fused_objective(tuple(int(t) for t in tile), tuple(spec),
+                         str(mode), str(impl), str(grad_impl), cd,
+                         None if interpret is None else bool(interpret))
+    return f(phi, moving, fixed)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_objective(tile, spec, mode, impl, grad_impl, cdtype, interpret):
+    from repro.core.similarity import _loss_from_spec
+    from repro.kernels import ops
+
+    sim = _loss_from_spec(spec)
+
+    def unfused(p, mov, fix):
+        disp = dense_field(p, tile, mov.shape, mode=mode, impl=impl,
+                           grad_impl=grad_impl, compute_dtype=cdtype)
+        warped = warp_volume(mov, disp, compute_dtype=cdtype)
+        return sim(warped.astype(jnp.float32), fix.astype(jnp.float32))
+
+    @jax.custom_vjp
+    def fused(p, mov, fix):
+        return ops.fused_similarity_loss(p, mov, fix, tile, sim_spec=spec,
+                                         compute_dtype=cdtype,
+                                         interpret=interpret)
+
+    def fwd(p, mov, fix):
+        return fused(p, mov, fix), (p, mov, fix)
+
+    def bwd(res, g):
+        # recompute-based backward: unused cotangents (mov/fix are data,
+        # not optimisation variables) are dead code XLA prunes
+        _, vjp = jax.vjp(unfused, *res)
+        return vjp(g)
+
+    fused.defvjp(fwd, bwd)
+    return fused
 
 
 def trilinear_sample(vol, coords):

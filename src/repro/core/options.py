@@ -59,6 +59,7 @@ UNSET = _Unset()
 _BSI_MODES = ("auto", "gather", "tt", "ttli", "separable")
 _BSI_IMPLS = ("auto", "jnp", "pallas")
 _GRAD_IMPLS = ("auto", "xla", "jnp", "pallas")
+_FUSED = ("auto", "on", "off")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +87,13 @@ class RegistrationOptions:
                      scalar`` loss callable (lower = better).
     stop:            optional ``engine.convergence.ConvergenceConfig`` —
                      early-stop each level when the loss plateaus.
+    fused:           fused level-step kernel (``core.ffd.fused_warp_loss``:
+                     BSI + warp + similarity in one VMEM Pallas pass, no
+                     dense field in HBM).  ``"auto"`` lets the autotuner
+                     race it against the unfused step per backend (custom
+                     similarities and over-budget volumes fall back to
+                     ``"off"``); ``"on"`` forces it (raising when
+                     unsupported); ``"off"`` is the unfused pipeline.
     """
 
     tile: tuple = (5, 5, 5)
@@ -99,6 +107,7 @@ class RegistrationOptions:
     compute_dtype: Any = None
     similarity: Any = "ssd"
     stop: Any = None
+    fused: str = "auto"
 
     def __post_init__(self):
         tile = tuple(int(t) for t in self.tile)
@@ -122,6 +131,12 @@ class RegistrationOptions:
         if self.grad_impl not in _GRAD_IMPLS:
             raise ValueError(
                 f"grad_impl must be one of {_GRAD_IMPLS}, got {self.grad_impl!r}"
+            )
+        if self.fused in (True, False):  # ergonomic bool spelling
+            object.__setattr__(self, "fused", "on" if self.fused else "off")
+        if self.fused not in _FUSED:
+            raise ValueError(
+                f"fused must be one of {_FUSED} (or a bool), got {self.fused!r}"
             )
         if self.compute_dtype is not None:
             import jax.numpy as jnp
@@ -179,6 +194,7 @@ class RegistrationOptions:
             impl=base.impl,
             grad_impl=base.grad_impl,
             compute_dtype=base.compute_dtype,
+            fused="off",  # affine has no FFD level step to fuse
         )
 
 

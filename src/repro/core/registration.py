@@ -147,7 +147,8 @@ def _ffd_level_runner(vol_shape, options):
                               mode=options.mode, impl=options.impl,
                               grad_impl=options.grad_impl,
                               compute_dtype=options.compute_dtype,
-                              similarity=options.similarity)
+                              similarity=options.similarity,
+                              fused=options.fused)
 
     return make_adam_runner(loss_builder, options=options)
 

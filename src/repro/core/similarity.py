@@ -33,6 +33,7 @@ from jax import lax
 
 __all__ = [
     "available_similarities",
+    "fused_spec",
     "lncc",
     "ncc",
     "ncc_loss",
@@ -87,6 +88,39 @@ def resolve_similarity(similarity):
         ) from None
 
 
+def fused_spec(similarity):
+    """The fused-kernel spec tuple for ``similarity``, or ``None``.
+
+    Every built-in loss (and every ``lncc()`` / ``nmi()`` factory variant)
+    carries a ``_fused_spec`` attribute naming its kind and parameters —
+    e.g. ``("lncc", window, eps)`` — which is all
+    ``kernels.ops.fused_similarity_loss`` needs to reproduce the loss as
+    in-VMEM partial sums.  Custom callables without the attribute return
+    ``None``: they have no fused accumulator and must run unfused.
+    """
+    _, fn = resolve_similarity(similarity)
+    return getattr(fn, "_fused_spec", None)
+
+
+def _loss_from_spec(spec):
+    """Rebuild the registry loss a fused spec tuple describes.
+
+    The exact inverse of :func:`fused_spec` — the factories are lru-cached,
+    so this returns the *same* callable object the spec came from and the
+    fused custom VJP's recompute-backward differentiates the identical loss.
+    """
+    kind = spec[0]
+    if kind == "ssd":
+        return ssd
+    if kind == "ncc":
+        return ncc_loss
+    if kind == "lncc":
+        return lncc(spec[1], spec[2])
+    if kind == "nmi":
+        return nmi(spec[1], spec[2], spec[3])
+    raise ValueError(f"unknown fused similarity spec {spec!r}")
+
+
 def similarity_token(similarity) -> str:
     """A short string naming ``similarity`` for disk-cache keys and logs.
 
@@ -130,6 +164,9 @@ def ssd(warped, fixed):
     return jnp.mean((warped - fixed) ** 2)
 
 
+ssd._fused_spec = ("ssd",)
+
+
 def ncc(a, b):
     """Global normalised cross-correlation coefficient (in ``[-1, 1]``)."""
     a = a - jnp.mean(a)
@@ -141,6 +178,9 @@ def ncc(a, b):
 def ncc_loss(warped, fixed):
     """``1 - NCC``: zero at perfect linear correlation."""
     return 1.0 - ncc(warped, fixed)
+
+
+ncc_loss._fused_spec = ("ncc",)
 
 
 @functools.lru_cache(maxsize=None)
@@ -162,6 +202,7 @@ def lncc(window=9, eps=1e-5):
         return 1.0 - jnp.mean(cc)
 
     lncc_loss.__qualname__ = f"lncc(window={window},eps={eps:g})"
+    lncc_loss._fused_spec = ("lncc", window, eps)
     return lncc_loss
 
 
@@ -201,6 +242,7 @@ def nmi(bins=32, sigma_ratio=0.5, eps=1e-8):
     nmi_loss.__qualname__ = (
         f"nmi(bins={bins},sigma_ratio={sigma_ratio:g},eps={eps:g})"
     )
+    nmi_loss._fused_spec = ("nmi", bins, sigma_ratio, eps)
     return nmi_loss
 
 

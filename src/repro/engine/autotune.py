@@ -12,8 +12,16 @@ configuration actually being registered and caches the winner:
   ``~/.cache/repro/bsi_autotune.json``) so repeated process launches —
   benchmark runs, serving replicas — skip the measurement entirely.
 
+The disk file is versioned (``SCHEMA_VERSION``): entries live under a
+``{"__schema__": N, "entries": {...}}`` wrapper, and a file from another
+schema — e.g. a pre-fused-axis cache — reads as a clean miss (re-benchmark
+and rewrite), never a ``KeyError`` or a silently mis-dispatched choice.
+
 Callers go through :func:`resolve_bsi`, which passes explicit choices
-through untouched and only tunes the ``"auto"`` axes.
+through untouched and only tunes the ``"auto"`` axes;
+:func:`resolve_options` additionally races the fused level step
+(``core.ffd.fused_warp_loss``) against the unfused winner when
+``options.fused == "auto"`` (:func:`autotune_fused`).
 """
 from __future__ import annotations
 
@@ -31,11 +39,17 @@ from repro.core.interpolate import GRAD_IMPLS, MODES, interpolate
 from repro.core.similarity import resolve_similarity, similarity_token
 from repro.kernels.ops import PALLAS_MODES
 
-__all__ = ["BsiChoice", "autotune_bsi", "resolve_bsi", "resolve_options",
-           "default_candidates", "default_grad_impls", "default_cache_path"]
+__all__ = ["BsiChoice", "SCHEMA_VERSION", "autotune_bsi", "autotune_fused",
+           "resolve_bsi", "resolve_options", "default_candidates",
+           "default_grad_impls", "default_cache_path"]
 
 JNP_CANDIDATES = tuple((m, "jnp") for m in sorted(MODES))
 PALLAS_CANDIDATES = tuple((m, "pallas") for m in PALLAS_MODES)
+
+# Disk-cache schema.  v2 added the fused level-step axis (BsiChoice.fused +
+# the "|fused|" race entries) and moved entries under the versioned wrapper;
+# v1 files (flat {key: choice} dicts) predate it and read as a clean miss.
+SCHEMA_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +60,9 @@ class BsiChoice:
     # adjoint implementation ("xla" = plain autodiff — the pre-custom-VJP
     # behaviour, and what legacy cache entries decode to)
     grad_impl: str = "xla"
+    # fused level step ("on" = core.ffd.fused_warp_loss won the race for
+    # this configuration; entries written by autotune_fused only)
+    fused: str = "off"
 
 
 _MEM_CACHE: dict = {}
@@ -89,28 +106,36 @@ def _key(grid_shape, tile, channels) -> str:
 
 
 def _load_disk(path) -> dict:
-    """Best-effort read: a corrupt/truncated/wrong-shape cache is a miss.
+    """Best-effort read: a corrupt/stale/wrong-shape cache is a miss.
 
     A half-written or hand-edited ``bsi_autotune.json`` must trigger a clean
     re-benchmark (which then rewrites the file), never an unhandled
-    ``JSONDecodeError``.
+    ``JSONDecodeError`` — and so must a file written by another
+    ``SCHEMA_VERSION`` (e.g. a pre-fused flat ``{key: choice}`` cache),
+    whose entries would otherwise decode with the new axes silently filled
+    by defaults measured under a different dispatch.
     """
     try:
         with open(path) as fh:
-            entries = json.load(fh)
+            data = json.load(fh)
     except (OSError, ValueError):
         return {}
+    if not isinstance(data, dict) or data.get("__schema__") != SCHEMA_VERSION:
+        return {}
+    entries = data.get("entries")
     return entries if isinstance(entries, dict) else {}
 
 
 def _parse_choice(hit):
     """A malformed cache entry (missing/mistyped fields) is a miss."""
     try:
-        return BsiChoice(str(hit["mode"]), str(hit["impl"]),
-                         float(hit["us_per_call"]),
-                         str(hit.get("grad_impl", "xla")))
+        choice = BsiChoice(str(hit["mode"]), str(hit["impl"]),
+                           float(hit["us_per_call"]),
+                           str(hit.get("grad_impl", "xla")),
+                           str(hit.get("fused", "off")))
     except (KeyError, TypeError, ValueError, AttributeError):
         return None
+    return choice if choice.fused in ("on", "off") else None
 
 
 def _store_disk(path, key, choice) -> None:
@@ -120,7 +145,8 @@ def _store_disk(path, key, choice) -> None:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         tmp = f"{path}.tmp.{os.getpid()}"
         with open(tmp, "w") as fh:
-            json.dump(entries, fh, indent=1, sort_keys=True)
+            json.dump({"__schema__": SCHEMA_VERSION, "entries": entries},
+                      fh, indent=1, sort_keys=True)
         os.replace(tmp, path)  # atomic: concurrent tuners never corrupt it
     except OSError:
         pass  # cache is best-effort; tuning still returned in-process
@@ -276,6 +302,103 @@ def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
     return best
 
 
+def autotune_fused(grid_shape, tile, vol_shape, *, base, similarity,
+                   compute_dtype=None, reps=3, cache_path=None,
+                   use_cache=True) -> BsiChoice:
+    """Race the fused level step against the unfused winner ``base``.
+
+    ``base`` is the already-resolved unfused :class:`BsiChoice` (concrete
+    ``mode``/``impl``/``grad_impl``); the race times one full level-step
+    gradient — BSI expansion + warp + ``similarity`` forward and backward —
+    through ``core.ffd.fused_warp_loss`` versus the unfused composition, and
+    returns ``base`` with ``fused`` set to the winner.
+
+    Resolves to ``"off"`` without measuring when the fused kernel does not
+    apply (custom similarity with no fused spec, volume over the VMEM
+    budget) and on backends where Pallas only runs under ``interpret=True``
+    (a correctness path, orders of magnitude slower — same exclusion as
+    :func:`default_candidates`; set ``REPRO_AUTOTUNE_PALLAS=1`` to force the
+    measurement anyway).  Cached like :func:`autotune_bsi`, keyed per
+    volume/similarity/dtype/base so fp32 and bf16 (or different unfused
+    winners) never share a decision.
+    """
+    from repro.core import ffd
+    from repro.core.similarity import fused_spec
+    from repro.kernels import ops as kops
+
+    grid_shape = tuple(int(g) for g in grid_shape)
+    tile = tuple(int(t) for t in tile)
+    vol_shape = tuple(int(s) for s in vol_shape)
+    compute_dtype = (jnp.dtype(compute_dtype).name
+                     if compute_dtype is not None else None)
+
+    spec = fused_spec(similarity)
+    ok, _ = kops.fused_supported(vol_shape, spec)
+    if not ok:
+        return dataclasses.replace(base, fused="off")
+    if kops.default_interpret() and not os.environ.get("REPRO_AUTOTUNE_PALLAS"):
+        return dataclasses.replace(base, fused="off")
+
+    key = (_key(grid_shape, tile, 3)
+           + "|fused|v" + "x".join(map(str, vol_shape))
+           + f"|sim={similarity_token(similarity)}"
+           + ("" if compute_dtype is None else f"|cd={compute_dtype}")
+           + f"|base={base.mode}/{base.impl}/{base.grad_impl}")
+    cache_path = default_cache_path() if cache_path is None else cache_path
+    mem_key = (cache_path, key)
+    if use_cache and mem_key in _MEM_CACHE:
+        return _MEM_CACHE[mem_key]
+    if use_cache:
+        hit = _load_disk(cache_path).get(key)
+        choice = _parse_choice(hit) if hit else None
+        if choice is not None:
+            _MEM_CACHE[mem_key] = choice
+            return choice
+
+    _, sim_fn = resolve_similarity(similarity)
+    dev = jax.local_devices()[0]
+    rng = np.random.default_rng(0)
+    phi = jax.device_put(
+        jnp.asarray(rng.standard_normal(grid_shape + (3,)), jnp.float32), dev)
+    mov = jax.device_put(jnp.asarray(rng.random(vol_shape), jnp.float32), dev)
+    fix = jax.device_put(jnp.asarray(rng.random(vol_shape), jnp.float32), dev)
+
+    def unfused_loss(p):
+        disp = ffd.dense_field(p, tile, vol_shape, mode=base.mode,
+                               impl=base.impl, grad_impl=base.grad_impl,
+                               compute_dtype=compute_dtype)
+        warped = ffd.warp_volume(mov, disp, compute_dtype=compute_dtype)
+        return sim_fn(warped.astype(jnp.float32), fix)
+
+    def fused_loss(p):
+        return ffd.fused_warp_loss(p, mov, fix, tile, similarity=similarity,
+                                   mode=base.mode, impl=base.impl,
+                                   grad_impl=base.grad_impl,
+                                   compute_dtype=compute_dtype)
+
+    best = dataclasses.replace(base, fused="off")
+    timed = []
+    for flag, loss in (("off", unfused_loss), ("on", fused_loss)):
+        fn = jax.jit(jax.grad(loss))
+        try:
+            jax.block_until_ready(fn(phi))  # compile + warmup
+        except Exception:
+            continue  # candidate unavailable on this backend/workload
+        times = []
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(phi))
+            times.append(time.perf_counter() - t0)
+        timed.append((float(np.median(times) * 1e6), flag))
+    if timed:
+        us, flag = min(timed)
+        best = dataclasses.replace(base, fused=flag, us_per_call=us)
+    if use_cache:
+        _MEM_CACHE[mem_key] = best
+        _store_disk(cache_path, key, best)
+    return best
+
+
 def _candidate_pool(mode, impl):
     """Candidates honouring explicitly fixed axes.
 
@@ -351,25 +474,44 @@ def resolve_options(options, vol_shape):
     The options-first face of the tuner: canonicalises the options
     (:meth:`RegistrationOptions.normalized` — similarity key, resolved
     ``stop``) and autotunes any ``"auto"`` BSI axis for the grid this volume
-    implies, returning a fully-concrete copy.  ``lru_cache``d on
-    ``(options, vol_shape)`` — the ``RegistrationOptions`` instance IS the
-    autotune cache key, the same object the compiled-runner caches and the
-    serving buckets key on, so one validated configuration maps to one
-    tuning decision everywhere.
+    implies, returning a fully-concrete copy.  ``fused="auto"`` is resolved
+    last (:func:`autotune_fused` — the fused level step races the resolved
+    unfused winner on the actual volume shape); ``fused="on"`` is validated
+    against the fused kernel's applicability and raises with the reason when
+    it cannot run.  ``lru_cache``d on ``(options, vol_shape)`` — the
+    ``RegistrationOptions`` instance IS the autotune cache key, the same
+    object the compiled-runner caches and the serving buckets key on, so one
+    validated configuration maps to one tuning decision everywhere.
     """
     from repro.core import ffd
     from repro.core.options import RegistrationOptions
+    from repro.core.similarity import fused_spec
+    from repro.kernels import ops as kops
 
     if not isinstance(options, RegistrationOptions):
         raise TypeError(
             f"resolve_options expects a RegistrationOptions, got {options!r}")
     opts = options.normalized()
     vol_shape = tuple(int(s) for s in vol_shape)
+    grid_shape = ffd.grid_shape_for_volume(vol_shape, opts.tile)
     mode, impl, grad_impl = resolve_bsi(
-        opts.mode, opts.impl,
-        ffd.grid_shape_for_volume(vol_shape, opts.tile), opts.tile,
+        opts.mode, opts.impl, grid_shape, opts.tile,
         grad_impl=opts.grad_impl,  # the adjoint axis is tuned jointly
         measure_grad=True,  # the loop's workload is forward+backward BSI
         similarity=opts.similarity,  # ... its backward mix is per-similarity
         compute_dtype=opts.compute_dtype)  # ... measured/cached per dtype
-    return opts.replace(mode=mode, impl=impl, grad_impl=grad_impl)
+    opts = opts.replace(mode=mode, impl=impl, grad_impl=grad_impl)
+    if opts.fused == "on":
+        ok, why = kops.fused_supported(vol_shape, fused_spec(opts.similarity))
+        if not ok:
+            raise ValueError(
+                f"fused='on' cannot run for this configuration: {why}; "
+                "use fused='auto' (or 'off') to fall back to the unfused "
+                "level step")
+    elif opts.fused == "auto":
+        choice = autotune_fused(
+            grid_shape, opts.tile, vol_shape,
+            base=BsiChoice(mode, impl, 0.0, grad_impl),
+            similarity=opts.similarity, compute_dtype=opts.compute_dtype)
+        opts = opts.replace(fused=choice.fused)
+    return opts

@@ -53,7 +53,8 @@ class BatchRegistrationResult:
 
 
 def ffd_level_loss(f, mov, *, tile, bending_weight, mode, impl,
-                   grad_impl="xla", compute_dtype=None, similarity="ssd"):
+                   grad_impl="xla", compute_dtype=None, similarity="ssd",
+                   fused="off"):
     """Similarity + bending-energy objective for one pyramid level.
 
     ``similarity`` is a registered name or a ``(warped, fixed) -> scalar``
@@ -64,9 +65,26 @@ def ffd_level_loss(f, mov, *, tile, bending_weight, mode, impl,
     gather-only custom VJP — see ``repro.core.interpolate``);
     ``compute_dtype`` runs the BSI expansion + warp in reduced precision
     (params, adjoint accumulation and the objective stay fp32).
+
+    ``fused="on"`` (or ``True``) swaps the similarity term for the fused
+    Pallas level step (``core.ffd.fused_warp_loss``): BSI displacement +
+    warp + similarity partial sums in one VMEM pass, no ``(X, Y, Z, 3)``
+    field or warped volume in HBM, with the gradient recomputed through the
+    unfused composition (so it is identical).  Requires a similarity with a
+    fused accumulator; the bending term stays outside (it reads only the
+    control grid).
     """
     vol_shape = f.shape
     _, sim = resolve_similarity(similarity)
+
+    if fused in ("on", True):
+        def loss_fn(p):
+            simloss = ffd.fused_warp_loss(
+                p, mov, f, tile, similarity=similarity, mode=mode, impl=impl,
+                grad_impl=grad_impl, compute_dtype=compute_dtype)
+            return simloss + bending_weight * ffd.bending_energy(p)
+
+        return loss_fn
 
     def loss_fn(p):
         disp = ffd.dense_field(p, tile, vol_shape, mode=mode, impl=impl,
@@ -85,7 +103,7 @@ def ffd_level_loss(f, mov, *, tile, bending_weight, mode, impl,
 
 def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
                  mode, impl, grad_impl="xla", compute_dtype=None,
-                 similarity="ssd", stop=None):
+                 similarity="ssd", stop=None, fused="off"):
     """Pure multi-level FFD registration of ONE ``(fixed, moving)`` pair.
 
     Traceable end-to-end (no timing, no host sync): the levels unroll into
@@ -114,7 +132,7 @@ def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
                                  bending_weight=bending_weight,
                                  mode=mode, impl=impl, grad_impl=grad_impl,
                                  compute_dtype=compute_dtype,
-                                 similarity=similarity)
+                                 similarity=similarity, fused=fused)
         if stop is None:
             phi, trace = adam_scan(loss_fn, phi, iters=iters, lr=lr)
         else:
@@ -150,7 +168,7 @@ def _compiled_batch(vol_shape, options, mesh=None):
                                      o.bending_weight, o.mode, o.impl,
                                      o.similarity, grad_impl=o.grad_impl,
                                      compute_dtype=o.compute_dtype,
-                                     stop=o.stop)
+                                     stop=o.stop, fused=o.fused)
 
     def single(f, m):
         return ffd_pipeline(f, m, tile=o.tile, levels=o.levels,
@@ -158,7 +176,8 @@ def _compiled_batch(vol_shape, options, mesh=None):
                             bending_weight=o.bending_weight,
                             mode=o.mode, impl=o.impl, grad_impl=o.grad_impl,
                             compute_dtype=o.compute_dtype,
-                            similarity=o.similarity, stop=o.stop)
+                            similarity=o.similarity, stop=o.stop,
+                            fused=o.fused)
 
     return jax.jit(jax.vmap(single))
 
@@ -285,7 +304,7 @@ def _lane_vg(f, m, options):
     return jax.value_and_grad(ffd_level_loss(
         f, m, tile=o.tile, bending_weight=o.bending_weight, mode=o.mode,
         impl=o.impl, grad_impl=o.grad_impl, compute_dtype=o.compute_dtype,
-        similarity=o.similarity))
+        similarity=o.similarity, fused=o.fused))
 
 
 @functools.lru_cache(maxsize=128)

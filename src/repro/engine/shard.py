@@ -132,7 +132,7 @@ def lane_sharding(mesh):
 def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
                      bending_weight, mode, impl, similarity, mesh,
                      grad_impl="xla", compute_dtype=None, rules=None,
-                     stop=None):
+                     stop=None, fused="off"):
     """Batched multi-level FFD with explicit sharding constraints.
 
     Same math as ``jax.vmap(engine.batch.ffd_pipeline)`` — the pyramid, the
@@ -181,7 +181,8 @@ def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
             loss_fn = ffd_level_loss(
                 f1, m1, tile=tile, bending_weight=bending_weight,
                 mode=mode, impl=impl, grad_impl=grad_impl,
-                compute_dtype=compute_dtype, similarity=similarity)
+                compute_dtype=compute_dtype, similarity=similarity,
+                fused=fused)
             if stop is None:
                 return adam_scan(loss_fn, p1, iters=iters, lr=lr)
             return adam_until(loss_fn, p1, stop=stop, lr=lr)
@@ -207,7 +208,8 @@ def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
 
 def compile_sharded_batch(mesh, tile, levels, iters, lr,
                           bending_weight, mode, impl, similarity,
-                          grad_impl="xla", compute_dtype=None, stop=None):
+                          grad_impl="xla", compute_dtype=None, stop=None,
+                          fused="off"):
     """Build the jitted sharded pipeline for one (mesh, configuration).
 
     Uncached by design: ``engine.batch._compiled_batch`` is the single
@@ -230,7 +232,8 @@ def compile_sharded_batch(mesh, tile, levels, iters, lr,
             F, M, tile=tile, levels=levels, iters=iters, lr=lr,
             bending_weight=bending_weight, mode=mode, impl=impl,
             grad_impl=grad_impl, compute_dtype=compute_dtype,
-            similarity=similarity, mesh=mesh, rules=rules, stop=stop)
+            similarity=similarity, mesh=mesh, rules=rules, stop=stop,
+            fused=fused)
 
     return jax.jit(batched, in_shardings=(vol_sh, vol_sh),
                    out_shardings=out_sh)

@@ -15,11 +15,13 @@ import jax.numpy as jnp
 
 from repro.core.bspline import lerp_luts, weight_lut
 from repro.kernels.bsi_adjoint import bsi_adjoint_separable_pallas
+from repro.kernels.bsi_fused import SCALAR_LANES, bsi_fused_pallas
 from repro.kernels.bsi_separable import bsi_separable_pallas
 from repro.kernels.bsi_tt import bsi_tt_pallas
 from repro.kernels.bsi_ttli import bsi_ttli_pallas
 
-__all__ = ["PALLAS_MODES", "bsi_pallas", "bsi_adjoint_pallas",
+__all__ = ["PALLAS_MODES", "FUSED_SIM_KINDS", "bsi_pallas",
+           "bsi_adjoint_pallas", "fused_similarity_loss", "fused_supported",
            "default_interpret", "pick_block_tiles"]
 
 # Modes with a Pallas kernel (``gather`` has none — it is the baseline the
@@ -205,6 +207,164 @@ def _bsi_adjoint_jit(g, tile, *, dtype, block_ctrl, interpret):
             out_dtype=out_dtype, interpret=interpret))
     out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
     return out[: num_ctrl[0], : num_ctrl[1], : num_ctrl[2]]
+
+
+# --- fused level step (BSI + warp + similarity, kernels.bsi_fused) ---------
+
+# Similarity kinds with a fused partial-sum accumulator.  The spec tuples
+# come from ``repro.core.similarity.fused_spec`` (first element = kind).
+FUSED_SIM_KINDS = ("ssd", "ncc", "lncc", "nmi")
+
+
+def fused_supported(vol_shape, sim_spec, itemsize=4,
+                    budget=_VMEM_BUDGET_BYTES):
+    """Whether the fused kernel can run this level: ``(ok, reason)``.
+
+    The fused kernel pins the moving *and* fixed volumes in VMEM (the warp
+    is a VMEM gather), so it is bounded by volume size, not grid size —
+    beyond the budget the unfused tiled kernels remain the path.  The
+    similarity must also have a fused accumulator (a registered kind with
+    known parameters; custom callables don't).
+    """
+    if sim_spec is None or sim_spec[0] not in FUSED_SIM_KINDS:
+        return False, "similarity has no fused accumulator"
+    vox = 1
+    for s in vol_shape:
+        vox *= int(s)
+    if 3 * vox * itemsize > budget:
+        return False, (f"volume {tuple(int(s) for s in vol_shape)} exceeds "
+                       "the fused kernel's VMEM volume budget")
+    return True, ""
+
+
+def pick_block_tiles_fused(num_tiles, tile, extra, sim_spec, itemsize,
+                           budget=_VMEM_BUDGET_BYTES):
+    """Tile-block for the fused kernel: cube-ish, VMEM-bounded.
+
+    Per-voxel temporaries dominate: the displacement block plus the eight
+    gather/lerp operands (~24 lanes), and for NMI the two ``(voxels, bins)``
+    Parzen weight blocks — the only place the histogram width ever
+    materialises.
+    """
+    lanes = 24
+    if sim_spec[0] == "nmi":
+        lanes += 2 * int(sim_spec[1])
+
+    def block_bytes(bt):
+        vox = 1
+        win = 1
+        for b, e, d in zip(bt, extra, tile):
+            vox *= (b + e) * d
+            win *= b + e + 3
+        return (vox * lanes + 24 * win) * itemsize
+
+    return _shrink_to_budget(num_tiles, block_bytes, budget)
+
+
+def fused_similarity_loss(phi, moving, fixed, tile, *, sim_spec,
+                          compute_dtype=None, block_tiles=None,
+                          interpret=None):
+    """Similarity loss of the warped moving volume — fused, no dense field.
+
+    Computes ``sim(warp(moving, bsi(phi)), fixed)`` where ``sim`` is the
+    registry loss named by ``sim_spec`` (see
+    ``repro.core.similarity.fused_spec``) without ever materialising the
+    ``(X, Y, Z, 3)`` displacement field or the warped volume in HBM: the
+    Pallas kernel (``kernels.bsi_fused``) accumulates partial sums per
+    VMEM tile-block and only the tiny reduction block reaches the host,
+    where this dispatcher finishes the registry-exact scalar formula.
+    Two-pass for NCC (mean of the warped volume) and NMI (its min/max).
+
+    Forward only — the differentiable wrapper is
+    ``repro.core.ffd.fused_warp_loss``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    cd = None if compute_dtype is None else jnp.dtype(compute_dtype).name
+    return _fused_loss_jit(phi, moving, fixed, tuple(int(t) for t in tile),
+                           sim_spec=tuple(sim_spec), compute_dtype=cd,
+                           block_tiles=block_tiles, interpret=bool(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "tile", "sim_spec", "compute_dtype", "block_tiles", "interpret"))
+def _fused_loss_jit(phi, moving, fixed, tile, *, sim_spec, compute_dtype,
+                    block_tiles, interpret):
+    kind = sim_spec[0]
+    if kind not in FUSED_SIM_KINDS:
+        raise ValueError(f"no fused kernel for similarity spec {sim_spec!r}")
+    if fixed.shape != moving.shape:
+        raise ValueError(f"shape mismatch: {fixed.shape} vs {moving.shape}")
+    vol_shape = tuple(int(s) for s in moving.shape)
+    X, Y, Z = vol_shape
+    num_tiles = tuple(int(n) - 3 for n in phi.shape[:3])
+    for n, d, s in zip(num_tiles, tile, vol_shape):
+        if n * d < s:
+            raise ValueError(f"control grid {phi.shape} does not cover "
+                             f"volume {vol_shape} at tile spacing {tile}")
+    if kind == "lncc":
+        # clamp like similarity.uniform_filter, then size the halo in tiles
+        size = max(1, min(int(sim_spec[1]), X, Y, Z))
+        sim_spec = ("lncc", size, float(sim_spec[2]))
+        extra = tuple(-(-(size - 1) // d) for d in tile)
+    else:
+        extra = (0, 0, 0)
+    if compute_dtype is not None:
+        phi = phi.astype(compute_dtype)
+        moving = moving.astype(compute_dtype)
+    fixed32 = fixed.astype(jnp.float32)
+    if block_tiles is None:
+        block_tiles = pick_block_tiles_fused(num_tiles, tile, extra, sim_spec,
+                                             phi.dtype.itemsize)
+    block_tiles = tuple(min(b, t) for b, t in zip(block_tiles, num_tiles))
+    grid = tuple(-(-t // b) for t, b in zip(num_tiles, block_tiles))
+    # pad the control grid to whole blocks + the LNCC halo, and both volumes
+    # to the matching voxel extent (padding is masked out of every sum)
+    ctrl = tuple(g * b + e + 3 for g, b, e in zip(grid, block_tiles, extra))
+    pads = [(0, c - p) for c, p in zip(ctrl, phi.shape[:3])] + [(0, 0)]
+    if any(p[1] for p in pads):
+        phi = jnp.pad(phi, pads)
+    vshape_p = tuple((g * b + e) * d
+                     for g, b, e, d in zip(grid, block_tiles, extra, tile))
+    vpads = [(0, vp - s) for vp, s in zip(vshape_p, vol_shape)]
+    mov_p = jnp.pad(moving, vpads) if any(p[1] for p in vpads) else moving
+    fix_p = jnp.pad(fixed32, vpads) if any(p[1] for p in vpads) else fixed32
+    luts = tuple(weight_lut(d, phi.dtype) for d in tile)
+    n = X * Y * Z
+    zeros = jnp.zeros((1, SCALAR_LANES), jnp.float32)
+
+    def run(sim, scalars):
+        return bsi_fused_pallas(phi, mov_p, fix_p, *luts, scalars, tile=tile,
+                                block_tiles=block_tiles, extra=extra,
+                                vol_shape=vol_shape, sim=sim,
+                                interpret=interpret)
+
+    if kind == "ssd":
+        acc = run(sim_spec, zeros)
+        return acc[0, 0] / n
+    if kind == "ncc":
+        st = run(("stats",), zeros)
+        scal = zeros.at[0, 0].set(st[0, 0] / n).at[0, 1].set(jnp.mean(fixed32))
+        acc = run(sim_spec, scal)
+        denom = jnp.maximum(jnp.sqrt(acc[0, 1] * acc[0, 2]), 1e-8)
+        return 1.0 - acc[0, 0] / denom
+    if kind == "lncc":
+        _, size, _ = sim_spec
+        acc = run(sim_spec, zeros)
+        npos = (X - size + 1) * (Y - size + 1) * (Z - size + 1)
+        return 1.0 - acc[0, 0] / npos
+    # nmi: joint Parzen histogram -> entropies, exactly similarity.nmi
+    _, bins, _, eps = sim_spec
+    st = run(("stats",), zeros)
+    scal = (zeros.at[0, 0].set(st[0, 1]).at[0, 1].set(st[0, 2])
+            .at[0, 2].set(jnp.min(fixed32)).at[0, 3].set(jnp.max(fixed32)))
+    pab = run(sim_spec, scal) / n
+    pa = jnp.sum(pab, axis=1)
+    pb = jnp.sum(pab, axis=0)
+    ha = -jnp.sum(pa * jnp.log(pa + eps))
+    hb = -jnp.sum(pb * jnp.log(pb + eps))
+    hab = -jnp.sum(pab * jnp.log(pab + eps))
+    return 2.0 - (ha + hb) / (hab + eps)
 
 
 def _pick_z_chunk(gp_shape, nz_pad, bz, itemsize, budget=_VMEM_BUDGET_BYTES):

@@ -19,7 +19,7 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
-__all__ = ["analyze_hlo", "HloStats"]
+__all__ = ["analyze_hlo", "buffer_shapes", "materializes_shape", "HloStats"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -56,6 +56,36 @@ def _shape_elems(type_str):
 
 def _shape_bytes(type_str):
     return sum(n * _DTYPE_BYTES[dt] for dt, n in _shape_elems(type_str))
+
+
+def buffer_shapes(text):
+    """Every array shape named anywhere in an HLO module.
+
+    Returns a set of ``(dtype, dims)`` tuples covering op outputs, parameters
+    and fusion internals alike.  The coarseness is the point: used with
+    :func:`materializes_shape` it supports assertions of the form "this
+    lowering never even *names* a dense-field-sized buffer" — stronger than
+    checking top-level (HBM) buffers only, since a shape absent from the
+    whole module text cannot be materialised by any schedule of it.
+    """
+    out = set()
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.add((dtype, shape))
+    return out
+
+
+def materializes_shape(text, dims) -> bool:
+    """True if any buffer in the HLO has extents ``dims``, up to axis order.
+
+    Axis order is ignored because XLA freely transposes logical layouts — a
+    ``(3, X, Y, Z)`` channel-first copy of an ``(X, Y, Z, 3)`` displacement
+    field is still the dense field in HBM.
+    """
+    want = sorted(int(d) for d in dims)
+    return any(sorted(shape) == want for _, shape in buffer_shapes(text))
 
 
 def _dims_of(type_str):

@@ -255,7 +255,7 @@ def test_autotune_compute_dtype_keys_and_excludes_xla(tmp_path):
     assert gi != "xla"
     resolve_bsi("auto", "jnp", (7, 7, 7), (2, 2, 2),
                 grad_impl="auto", reps=1, cache_path=cache)
-    keys = list(json.load(open(cache)))
+    keys = list(json.load(open(cache))["entries"])  # v2 schema wrapper
     assert any("|cd=bfloat16|" in k for k in keys)
     assert any("|cd=" not in k for k in keys)
     assert len(keys) == 2  # distinct entries, no sharing

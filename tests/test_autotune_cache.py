@@ -28,20 +28,45 @@ def test_corrupt_cache_triggers_clean_rebenchmark(tmp_path, payload):
     cache.write_bytes(payload)
     choice = _tune(cache)  # must not raise JSONDecodeError
     assert choice.mode in {"ttli", "separable"} and choice.us_per_call > 0
-    # the re-benchmark rewrote the file as valid JSON
-    entries = json.loads(cache.read_text())
-    assert isinstance(entries, dict) and len(entries) == 1
+    # the re-benchmark rewrote the file as valid versioned JSON
+    data = json.loads(cache.read_text())
+    assert data["__schema__"] == autotune.SCHEMA_VERSION
+    assert isinstance(data["entries"], dict) and len(data["entries"]) == 1
+
+
+def test_stale_schema_cache_is_a_miss_not_an_error(tmp_path):
+    """A disk cache written before the fused axis existed (SCHEMA_VERSION
+    bump) must read as a clean miss — re-benchmark and rewrite — never a
+    KeyError or a choice silently mis-dispatched with default fields."""
+    cache = tmp_path / "bsi_autotune.json"
+    # the v1 layout: a flat {key: choice} dict, no __schema__ wrapper
+    stale_key = ("cpu|g7x7x7|t2x2x2|c2|"
+                 "ttli/jnp,separable/jnp")
+    cache.write_text(json.dumps({
+        stale_key: {"mode": "ttli", "impl": "jnp", "us_per_call": 1.0}}))
+    assert autotune._load_disk(str(cache)) == {}
+    choice = _tune(cache)  # re-benchmarks instead of trusting the v1 entry
+    assert choice.mode in {"ttli", "separable"} and choice.us_per_call > 0
+    data = json.loads(cache.read_text())  # ... and upgraded the file
+    assert data["__schema__"] == autotune.SCHEMA_VERSION
+    # a future schema is equally a miss (no partial decode of unknown layouts)
+    cache.write_text(json.dumps(
+        {"__schema__": autotune.SCHEMA_VERSION + 1, "entries": {"k": {}}}))
+    assert autotune._load_disk(str(cache)) == {}
 
 
 def test_malformed_entry_is_a_miss_not_an_error(tmp_path):
     cache = tmp_path / "bsi_autotune.json"
     first = _tune(cache)
-    entries = json.loads(cache.read_text())
-    (key,) = entries
+    data = json.loads(cache.read_text())
+    (key,) = data["entries"]
     # hand-edit the entry into nonsense: missing fields / wrong types
     for bad in ({}, {"mode": "ttli"}, {"mode": "ttli", "impl": "jnp",
-                                       "us_per_call": "fast"}, "zap"):
-        cache.write_text(json.dumps({key: bad}))
+                                       "us_per_call": "fast"},
+                {"mode": "ttli", "impl": "jnp", "us_per_call": 1.0,
+                 "fused": "sideways"}, "zap"):
+        cache.write_text(json.dumps({"__schema__": autotune.SCHEMA_VERSION,
+                                     "entries": {key: bad}}))
         again = _tune(cache)  # re-measures; winner may differ (timing noise)
         assert again.mode in {"ttli", "separable"} and again.us_per_call > 0
     assert first.us_per_call > 0
@@ -51,8 +76,8 @@ def test_valid_cache_entry_still_round_trips(tmp_path):
     cache = tmp_path / "bsi_autotune.json"
     first = _tune(cache)
     # rewrite the file as-is; a fresh read must serve the stored choice
-    entries = json.loads(cache.read_text())
-    cache.write_text(json.dumps(entries))
+    data = json.loads(cache.read_text())
+    cache.write_text(json.dumps(data))
     assert _tune(cache) == first
 
 
@@ -66,7 +91,29 @@ def test_per_similarity_cache_keys_are_distinct(tmp_path):
                                           ("separable", "jnp")),
                               measure_grad=True, similarity=sim)
         assert choice.us_per_call > 0
-    entries = json.loads((cache).read_text())
+    entries = json.loads((cache).read_text())["entries"]
     assert len(entries) == 2
     assert any("|sim=ssd|" in k for k in entries)
     assert any("|sim=nmi|" in k for k in entries)
+
+
+def test_fused_race_entry_round_trips(tmp_path, monkeypatch):
+    """autotune_fused caches its decision under the v2 schema and serves it
+    back without re-measuring (us_per_call would differ on a re-race)."""
+    # force the actual measurement on CPU hosts (same override that admits
+    # interpret-mode Pallas into default_candidates)
+    monkeypatch.setenv("REPRO_AUTOTUNE_PALLAS", "1")
+    cache = tmp_path / "bsi_autotune.json"
+    base = autotune.BsiChoice("separable", "jnp", 0.0, "jnp")
+    autotune._MEM_CACHE.clear()
+    first = autotune.autotune_fused(GRID, TILE, (8, 8, 8), base=base,
+                                    similarity="ssd", reps=1,
+                                    cache_path=str(cache))
+    assert first.fused in ("on", "off") and first.us_per_call > 0
+    autotune._MEM_CACHE.clear()
+    again = autotune.autotune_fused(GRID, TILE, (8, 8, 8), base=base,
+                                    similarity="ssd", reps=1,
+                                    cache_path=str(cache))
+    assert again == first
+    entries = json.loads(cache.read_text())["entries"]
+    assert any("|fused|" in k for k in entries)

@@ -1,0 +1,177 @@
+"""Fused level-step megakernel parity: fused == unfused everywhere it runs.
+
+The fused path (``core.ffd.fused_warp_loss`` -> ``kernels.bsi_fused``)
+evaluates BSI + warp + similarity in one VMEM pass; these tests pin it to
+the unfused dense-field -> warp -> similarity composition — loss AND
+gradient — across all four registered similarities, non-divisible tile
+shapes, reduced compute dtypes, ``vmap`` (``register_batch``), a device
+mesh, and the early-stopped convergence loop.  The gradient parity is exact
+by construction (the custom VJP differentiates the unfused composition) —
+what these tests actually guard is the fused *forward*.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ffd
+from repro.core.options import RegistrationOptions
+from repro.core.registration import ffd_register
+from repro.core.similarity import resolve_similarity
+from repro.engine import ConvergenceConfig, register_batch
+from repro.engine.autotune import resolve_options
+
+SIMS = ("ssd", "ncc", "lncc", "nmi")
+VOL = (12, 11, 9)
+TILE = (3, 3, 3)
+
+
+def _data(vol=VOL, seed=0):
+    rng = np.random.default_rng(seed)
+    g = ffd.grid_shape_for_volume(vol, TILE)
+    phi = jnp.asarray(0.8 * rng.standard_normal(g + (3,)), jnp.float32)
+    mov = jnp.asarray(rng.random(vol), jnp.float32)
+    fix = jnp.asarray(rng.random(vol), jnp.float32)
+    return phi, mov, fix
+
+
+def _unfused(phi, mov, fix, tile, vol, sim, compute_dtype=None):
+    _, sim_fn = resolve_similarity(sim)
+    disp = ffd.dense_field(phi, tile, vol, compute_dtype=compute_dtype)
+    warped = ffd.warp_volume(mov, disp, compute_dtype=compute_dtype)
+    return sim_fn(warped.astype(jnp.float32), fix)
+
+
+@pytest.mark.parametrize("sim", SIMS)
+def test_fused_matches_unfused_loss_and_grad(sim):
+    phi, mov, fix = _data()
+
+    def fused(p):
+        return ffd.fused_warp_loss(p, mov, fix, TILE, similarity=sim)
+
+    def unfused(p):
+        return _unfused(p, mov, fix, TILE, VOL, sim)
+
+    lf, gf = jax.value_and_grad(fused)(phi)
+    lu, gu = jax.value_and_grad(unfused)(phi)
+    assert abs(float(lf) - float(lu)) <= 1e-5 * max(1.0, abs(float(lu)))
+    assert float(jnp.max(jnp.abs(gf - gu))) <= 1e-5
+
+
+@pytest.mark.parametrize("vol,tile", [
+    ((7, 6, 5), (2, 3, 4)),     # every axis a different, non-divisible tile
+    ((13, 10, 9), (4, 4, 4)),   # grid overhangs the volume on two axes
+])
+@pytest.mark.parametrize("sim", ("ssd", "lncc"))  # lncc exercises the halo
+def test_fused_non_divisible_tiles(vol, tile, sim):
+    rng = np.random.default_rng(1)
+    g = ffd.grid_shape_for_volume(vol, tile)
+    phi = jnp.asarray(rng.standard_normal(g + (3,)), jnp.float32)
+    mov = jnp.asarray(rng.random(vol), jnp.float32)
+    fix = jnp.asarray(rng.random(vol), jnp.float32)
+    lf = ffd.fused_warp_loss(phi, mov, fix, tile, similarity=sim)
+    lu = _unfused(phi, mov, fix, tile, vol, sim)
+    assert abs(float(lf) - float(lu)) <= 1e-5 * max(1.0, abs(float(lu)))
+
+
+@pytest.mark.parametrize("sim", SIMS)
+def test_fused_bf16_compute_dtype(sim):
+    """bf16 forward stays close to the fp32 reference; the adjoint (and the
+    loss itself) accumulate in fp32, so gradients come back finite fp32."""
+    phi, mov, fix = _data(seed=2)
+
+    def fused(p):
+        return ffd.fused_warp_loss(p, mov, fix, TILE, similarity=sim,
+                                   compute_dtype="bfloat16")
+
+    l16, g16 = jax.value_and_grad(fused)(phi)
+    l32 = ffd.fused_warp_loss(phi, mov, fix, TILE, similarity=sim)
+    # bf16 quantisation of the field/warp shifts the loss by O(1e-3) rel
+    assert abs(float(l16) - float(l32)) <= 3e-3 * max(1.0, abs(float(l32)))
+    assert g16.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(g16)))
+    # and the bf16 fused forward matches the bf16 UNfused forward tightly —
+    # same quantisation points, so the kernel itself adds no extra error
+    lu16 = _unfused(phi, mov, fix, TILE, VOL, sim, compute_dtype="bfloat16")
+    assert abs(float(l16) - float(lu16)) <= 1e-4 * max(1.0, abs(float(lu16)))
+
+
+def test_register_batch_fused_parity_under_vmap():
+    rng = np.random.default_rng(3)
+    F = jnp.asarray(rng.random((2,) + VOL), jnp.float32)
+    M = jnp.asarray(rng.random((2,) + VOL), jnp.float32)
+    kw = dict(tile=TILE, levels=1, iters=4, mode="separable", impl="jnp",
+              grad_impl="xla")
+    on = register_batch(F, M, options=RegistrationOptions(**kw, fused="on"))
+    off = register_batch(F, M, options=RegistrationOptions(**kw, fused="off"))
+    assert float(jnp.max(jnp.abs(on.warped - off.warped))) <= 1e-5
+    assert float(jnp.max(jnp.abs(on.losses - off.losses))) <= 1e-5
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 devices (run the multi-device CI job)")
+def test_sharded_fused_matches_unsharded():
+    from repro.engine import make_registration_mesh
+
+    rng = np.random.default_rng(4)
+    n = len(jax.devices())
+    F = jnp.asarray(rng.random((n,) + VOL), jnp.float32)
+    M = jnp.asarray(rng.random((n,) + VOL), jnp.float32)
+    opts = RegistrationOptions(tile=TILE, levels=1, iters=4,
+                               mode="separable", impl="jnp",
+                               grad_impl="xla", fused="on")
+    sharded = register_batch(F, M, options=opts,
+                             mesh=make_registration_mesh(n))
+    single = register_batch(F, M, options=opts)
+    assert float(jnp.max(jnp.abs(jnp.asarray(sharded.warped)
+                                 - jnp.asarray(single.warped)))) <= 1e-5
+
+
+def test_fused_convergence_stop_parity():
+    """Early stopping sees identical per-step losses either way, so the
+    fused and unfused runs must stop at the same step with the same loss."""
+    rng = np.random.default_rng(5)
+    fix = jnp.asarray(rng.random(VOL), jnp.float32)
+    mov = jnp.asarray(rng.random(VOL), jnp.float32)
+    kw = dict(tile=TILE, levels=1, iters=12, lr=0.1, mode="separable",
+              impl="jnp", grad_impl="xla",
+              stop=ConvergenceConfig(tol=1e-3, patience=3))
+    on = ffd_register(fix, mov, options=RegistrationOptions(**kw, fused="on"))
+    off = ffd_register(fix, mov,
+                       options=RegistrationOptions(**kw, fused="off"))
+    assert on.steps == off.steps
+    np.testing.assert_allclose(on.losses, off.losses, atol=1e-5)
+
+
+def test_fused_on_with_custom_similarity_raises():
+    def my_sim(w, f):
+        return jnp.mean((w - f) ** 2)
+
+    opts = RegistrationOptions(tile=TILE, levels=1, iters=2,
+                               mode="separable", impl="jnp",
+                               grad_impl="xla", similarity=my_sim,
+                               fused="on")
+    with pytest.raises(ValueError, match="fused"):
+        resolve_options(opts, VOL)
+
+
+def test_fused_bool_spelling_normalises():
+    assert RegistrationOptions(fused=True).fused == "on"
+    assert RegistrationOptions(fused=False).fused == "off"
+    with pytest.raises(ValueError):
+        RegistrationOptions(fused="sideways")
+
+
+@pytest.mark.skipif(jax.default_backend() != "cpu",
+                    reason="the interpret-mode exclusion only applies on CPU")
+def test_fused_auto_resolves_off_on_cpu(tmp_path, monkeypatch):
+    """On CPU hosts the fused kernel only runs under interpret=True — a
+    correctness path — so fused="auto" must resolve to the unfused step
+    without even paying for a measurement."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "cache.json"))
+    monkeypatch.delenv("REPRO_AUTOTUNE_PALLAS", raising=False)
+    opts = RegistrationOptions(tile=TILE, levels=1, iters=2,
+                               mode="separable", impl="jnp", grad_impl="xla",
+                               fused="auto")
+    resolved = resolve_options(opts, (20, 20, 20))
+    assert resolved.fused == "off"

@@ -2,7 +2,8 @@
 import jax
 import jax.numpy as jnp
 
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import (analyze_hlo, buffer_shapes,
+                                       materializes_shape)
 
 
 def _flops(fn, *args):
@@ -70,6 +71,53 @@ def test_bytes_scale_with_trip_count():
     s = _flops(f, x)
     # each iteration reads + writes ~4MB; 10 iterations >= 80MB
     assert s.bytes_accessed >= 10 * 2 * 4 * 1024 * 1024 * 0.9
+
+
+def test_buffer_shapes_and_materializes_shape():
+    def f(a, b):
+        return (a @ b).T  # transposed output: axis order must not matter
+
+    a = jax.ShapeDtypeStruct((17, 23), jnp.float32)
+    b = jax.ShapeDtypeStruct((23, 5), jnp.float32)
+    txt = jax.jit(f).lower(a, b).compile().as_text()
+    shapes = {s for _, s in buffer_shapes(txt)}
+    assert (17, 23) in shapes and (23, 5) in shapes
+    assert materializes_shape(txt, (17, 5))   # the product, any layout
+    assert materializes_shape(txt, (5, 17))   # ... order-insensitive
+    assert not materializes_shape(txt, (17, 23, 5))
+
+
+def test_fused_level_step_never_materializes_dense_field():
+    """The tentpole claim, statically: the fused level-step lowering never
+    even NAMES an (X, Y, Z, 3)-extent buffer — the dense displacement field
+    exists only as per-block VMEM tiles — while the unfused composition
+    (the positive control, proving the probe can see it) does.  Block tiles
+    are pinned below the full grid so the per-block shapes cannot
+    accidentally equal the dense field's."""
+    import numpy as np
+
+    from repro.core import ffd
+    from repro.kernels import ops
+
+    vol, tile = (12, 11, 9), (3, 3, 3)
+    g = ffd.grid_shape_for_volume(vol, tile)
+    rng = np.random.default_rng(0)
+    phi = jnp.asarray(rng.standard_normal(g + (3,)), jnp.float32)
+    mov = jnp.asarray(rng.random(vol), jnp.float32)
+    fix = jnp.asarray(rng.random(vol), jnp.float32)
+
+    def fused(p, m, f):
+        return ops.fused_similarity_loss(p, m, f, tile, sim_spec=("ssd",),
+                                         block_tiles=(1, 1, 1))
+
+    def unfused(p, m, f):
+        disp = ffd.dense_field(p, tile, vol)
+        return jnp.mean((ffd.warp_volume(m, disp) - f) ** 2)
+
+    fused_txt = jax.jit(fused).lower(phi, mov, fix).compile().as_text()
+    unfused_txt = jax.jit(unfused).lower(phi, mov, fix).compile().as_text()
+    assert not materializes_shape(fused_txt, vol + (3,))
+    assert materializes_shape(unfused_txt, vol + (3,))
 
 
 def test_collective_bytes_counted_inside_loops():
