@@ -155,6 +155,74 @@ def run(shape=(48, 40, 36), iters=25, affine_iters=30, multimodal=True):
     return rows
 
 
+def run_transforms(shape=(22, 20, 18), tile=(4, 4, 4), iters=12,
+                   fold_iters=60, fold_lr=0.5, fold_magnitude=8.0):
+    """Transform/regularizer rows: diffeomorphic velocity + analytic bending.
+
+    Two sections.  (a) A standard pair registered with the classic
+    displacement FFD, the stationary-velocity-field transform
+    (``transform="velocity"``: scaling-and-squaring integration) and the
+    analytic bending regularizer (``regularizer="bending"``, Shah et al.'s
+    closed-form gradient) — time + quality + min Jacobian determinant per
+    row.  (b) The IGS-safety fold case: an aggressive synthetic
+    pneumoperitoneum (``fold_magnitude``) that the *unregularised*
+    displacement FFD matches only by folding space (``min_jac < 0``), where
+    the velocity transform (+ analytic bending) stays fold-free
+    (``min_jac > 0``) at equal-or-better similarity — the acceptance
+    workload of the pluggable-transform layer.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.regularizer import bending
+    from repro.core.transform import dense_displacement, jacobian_determinant
+
+    def min_jac(opts, params):
+        disp = dense_displacement(opts.transform, params, opts.tile, shape,
+                                  mode=opts.mode, impl=opts.impl)
+        return float(jnp.min(jacobian_determinant(disp)))
+
+    base = RegistrationOptions(tile=tile, levels=2, iters=iters,
+                               mode="separable", impl="jnp",
+                               grad_impl="xla", fused="off")
+    fixed, moving, _ = make_pair(shape=shape, tile=tile, magnitude=2.0,
+                                 seed=0)
+    rows = []
+    for name, opts in (
+            ("ffd_displacement", base),
+            ("ffd_velocity", base.replace(transform="velocity")),
+            ("ffd_bending", base.replace(regularizer=bending(1e-3)))):
+        res = ffd_register(fixed, moving, options=opts)
+        rows.append(
+            (f"registration/transforms/{name}",
+             round(res.seconds * 1e6, 0),
+             f"mae={float(metrics.mae(res.warped, fixed)):.4f}"
+             f"|ssim={float(metrics.ssim(res.warped, fixed)):.4f}"
+             f"|min_jac={min_jac(opts, res.params):.3f}"))
+
+    ffold, mfold, _ = make_pair(shape=shape, tile=tile,
+                                magnitude=fold_magnitude, seed=3)
+    fold_base = base.replace(iters=fold_iters, lr=fold_lr,
+                             bending_weight=0.0)
+    disp_res = ffd_register(ffold, mfold, options=fold_base)
+    vel_opts = fold_base.replace(transform="velocity",
+                                 regularizer=bending(3e-3))
+    vel_res = ffd_register(ffold, mfold, options=vel_opts)
+    sim_disp = float(jnp.mean((disp_res.warped - ffold) ** 2))
+    sim_vel = float(jnp.mean((vel_res.warped - ffold) ** 2))
+    rows += [
+        ("registration/transforms/fold_displacement",
+         round(disp_res.seconds * 1e6, 0),
+         f"sim={sim_disp:.5f}"
+         f"|min_jac={min_jac(fold_base, disp_res.params):.3f}"),
+        ("registration/transforms/fold_velocity",
+         round(vel_res.seconds * 1e6, 0),
+         f"sim={sim_vel:.5f}"
+         f"|min_jac={min_jac(vel_opts, vel_res.params):.3f}"
+         f"|sim_excess={sim_vel / max(sim_disp, 1e-12) - 1:+.1%}"),
+    ]
+    return rows
+
+
 def run_earlystop(shape=(22, 20, 18), iters=24, batch=4, lr=0.1,
                   tol=3e-4, patience=8):
     """Early-stop rows: fixed-``iters`` vs ``stop=ConvergenceConfig(...)``.
@@ -257,11 +325,13 @@ def run_sharded(shape=(24, 20, 18), iters=6, batch=8, device_counts=None):
     return rows
 
 
-def main(sharded=False, earlystop=False, **kwargs):
+def main(sharded=False, earlystop=False, transforms=False, **kwargs):
     if sharded:
         rows = run_sharded(**kwargs)
     elif earlystop:
         rows = run_earlystop(**kwargs)
+    elif transforms:
+        rows = run_transforms(**kwargs)
     else:
         rows = run(**kwargs)
     return emit(rows, ["name", "us_per_call", "derived"])
@@ -279,6 +349,9 @@ if __name__ == "__main__":
     ap.add_argument("--earlystop", action="store_true",
                     help="fixed-iters vs stop=ConvergenceConfig rows "
                          "(steps saved + loss excess on mixed/easy batches)")
+    ap.add_argument("--transforms", action="store_true",
+                    help="velocity-transform + analytic-bending rows incl. "
+                         "the fold-case min-Jacobian comparison")
     # None -> each path keeps its own defaults (run(): the paper-analogue
     # (48, 40, 36) x 25 iters; run_sharded(): a CPU-budget (24, 20, 18) x 6;
     # run_earlystop(): (22, 20, 18) x 24)
@@ -294,7 +367,9 @@ if __name__ == "__main__":
     if args.iters is not None:
         kwargs["iters"] = args.iters
 
-    if args.earlystop:
+    if args.transforms:
+        main(transforms=True, **kwargs)
+    elif args.earlystop:
         main(earlystop=True,
              **({"batch": args.batch} if args.batch is not None else {}),
              **kwargs)

@@ -62,6 +62,13 @@ def _suites(preset):
                 volumes=("phantom2",))),
             ("registration_bench", lambda: registration_bench.main(
                 shape=(22, 20, 18), iters=4, affine_iters=10)),
+            # pluggable transform/regularizer axes: velocity + analytic
+            # bending rows, and the fold-case min-Jacobian comparison
+            # (velocity min_jac > 0 where displacement folds — ISSUE 8
+            # acceptance)
+            ("registration_transforms", lambda: registration_bench.main(
+                transforms=True, shape=(22, 20, 18), iters=4,
+                fold_iters=60)),
             # convergence-aware serving: steps saved + loss excess of
             # stop=ConvergenceConfig vs fixed iters (ISSUE 5 acceptance)
             ("registration_earlystop", lambda: registration_bench.main(

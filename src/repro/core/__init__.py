@@ -2,5 +2,6 @@
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
 from repro.core.options import UNSET, RegistrationOptions, merge_legacy_options
+from repro.core.registry import Registry
 
-__all__ = ["UNSET", "RegistrationOptions", "merge_legacy_options"]
+__all__ = ["UNSET", "Registry", "RegistrationOptions", "merge_legacy_options"]

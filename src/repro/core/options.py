@@ -85,6 +85,19 @@ class RegistrationOptions:
                      ``"bfloat16"``), or None for fp32 throughout.
     similarity:      registered similarity name or a ``(warped, fixed) ->
                      scalar`` loss callable (lower = better).
+    transform:       transform model: registered name (``"displacement"`` |
+                     ``"velocity"``) or a frozen spec from
+                     ``repro.core.transform`` (e.g.
+                     ``velocity(squarings=4)``).  ``"velocity"`` integrates
+                     a stationary velocity field by scaling and squaring —
+                     invertible, fold-free deformations for the IGS-safety
+                     workloads; names normalise to their spec instance.
+    regularizer:     registered name (``"none"`` | ``"bending"``) or a
+                     frozen spec from ``repro.core.regularizer``.
+                     ``"none"`` keeps the historical ``bending_weight``
+                     finite-difference proxy; ``"bending"`` replaces it
+                     with the analytic uniform-cubic-B-spline bending
+                     energy (weight via ``bending(weight=...)``).
     stop:            optional ``engine.convergence.ConvergenceConfig`` —
                      early-stop each level when the loss plateaus.
     fused:           fused level-step kernel (``core.ffd.fused_warp_loss``:
@@ -106,6 +119,8 @@ class RegistrationOptions:
     grad_impl: str = "auto"
     compute_dtype: Any = None
     similarity: Any = "ssd"
+    transform: Any = "displacement"
+    regularizer: Any = "none"
     stop: Any = None
     fused: str = "auto"
 
@@ -148,6 +163,25 @@ class RegistrationOptions:
             raise TypeError(
                 "similarity must be a registered name or a loss callable, "
                 f"got {self.similarity!r}"
+            )
+        # Canonicalise transform/regularizer to their frozen spec instances
+        # (same discipline as the fused bool -> "on"/"off" normalisation):
+        # "velocity" and velocity() hash equal, and the spec instance is the
+        # sole program-cache key downstream.
+        from repro.core.regularizer import resolve_regularizer
+        from repro.core.transform import VelocityTransform, resolve_transform
+
+        object.__setattr__(self, "transform", resolve_transform(self.transform))
+        object.__setattr__(
+            self, "regularizer", resolve_regularizer(self.regularizer)
+        )
+        if self.fused == "on" and isinstance(self.transform, VelocityTransform):
+            raise ValueError(
+                "fused='on' is incompatible with transform='velocity': the "
+                "fused level-step kernel evaluates BSI + warp + similarity "
+                "in one pass and cannot interleave the scaling-and-squaring "
+                "compositions the velocity transform needs; use fused='auto' "
+                "or 'off' (velocity always runs the unfused pipeline)"
             )
         if self.stop is not None:
             from repro.engine.convergence import ConvergenceConfig
@@ -194,6 +228,8 @@ class RegistrationOptions:
             impl=base.impl,
             grad_impl=base.grad_impl,
             compute_dtype=base.compute_dtype,
+            transform=base.transform,
+            regularizer=base.regularizer,
             fused="off",  # affine has no FFD level step to fuse
         )
 
@@ -243,10 +279,11 @@ def merge_legacy_options(
         site = (fn_name, frame.f_code.co_filename, frame.f_lineno)
         if site not in _WARNED_SITES:
             _WARNED_SITES.add(site)
+            spelled = ", ".join(f"{k}=..." for k in sorted(passed))
             warnings.warn(
                 f"{fn_name}: the keyword arguments {sorted(passed)} are "
-                "deprecated; pass options=RegistrationOptions(...) instead "
-                "(see repro.core.options)",
+                f"deprecated; pass options=RegistrationOptions({spelled}) "
+                "instead (see repro.core.options)",
                 DeprecationWarning,
                 stacklevel=stacklevel,
             )

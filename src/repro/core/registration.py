@@ -148,6 +148,8 @@ def _ffd_level_runner(vol_shape, options):
                               grad_impl=options.grad_impl,
                               compute_dtype=options.compute_dtype,
                               similarity=options.similarity,
+                              transform=options.transform,
+                              regularizer=options.regularizer,
                               fused=options.fused)
 
     return make_adam_runner(loss_builder, options=options)
@@ -168,6 +170,8 @@ def ffd_register(
     grad_impl=UNSET,
     compute_dtype=UNSET,
     similarity=UNSET,
+    transform=UNSET,
+    regularizer=UNSET,
     stop=UNSET,
     measure_bsi_time=False,
 ):
@@ -189,7 +193,15 @@ def ffd_register(
     accumulation.  ``similarity`` is a registered name (``"ssd" | "ncc" |
     "lncc" | "nmi"`` — NMI being the multi-modal NiftyReg path) or a
     ``(warped, fixed) -> scalar`` loss callable (lower = better; see
-    ``repro.core.similarity``).  ``stop`` (a ``ConvergenceConfig``, see
+    ``repro.core.similarity``).  ``transform`` (``"displacement" |
+    "velocity"`` or a ``repro.core.transform`` spec) picks the deformation
+    model — ``"velocity"`` integrates a stationary velocity field by scaling
+    and squaring, giving invertible, fold-free (diffeomorphic) warps;
+    ``regularizer`` (``"none" | "bending"`` or a ``repro.core.regularizer``
+    spec) picks the smoothness term — ``"bending"`` is the analytic
+    B-spline bending energy with closed-form gradient, replacing the legacy
+    ``bending_weight`` finite-difference proxy.  ``stop`` (a
+    ``ConvergenceConfig``, see
     ``repro.engine.convergence``) replaces each level's fixed-``iters`` scan
     with an early-stopped ``lax.while_loop`` (``stop.max_iters`` defaults to
     ``iters``); the result's ``steps`` then lists the Adam steps each level
@@ -202,7 +214,8 @@ def ffd_register(
         dict(tile=tile, levels=levels, iters=iters, lr=lr,
              bending_weight=bending_weight, mode=mode, impl=impl,
              grad_impl=grad_impl, compute_dtype=compute_dtype,
-             similarity=similarity, stop=stop))
+             similarity=similarity, transform=transform,
+             regularizer=regularizer, stop=stop))
     opts = resolve_options(opts, fixed.shape)  # autotune + canonicalise
     tile, stop = opts.tile, opts.stop
 
@@ -248,7 +261,10 @@ def ffd_register(
             ran = steps[-1] if stop is not None else opts.iters
             bsi_seconds = (time.perf_counter() - t1) / reps * ran * 2
 
-    disp = bsi_fn(phi, tile, fixed.shape)
+    from repro.core.transform import dense_displacement
+
+    disp = dense_displacement(opts.transform, phi, tile, fixed.shape,
+                              mode=opts.mode, impl=opts.impl)
     warped = ffd.warp_volume(moving, disp)
     return RegistrationResult(
         warped, phi, losses, time.perf_counter() - t0, bsi_seconds,

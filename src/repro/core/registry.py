@@ -1,0 +1,93 @@
+"""The shared name->value registry behind the pluggable axes.
+
+``similarity=``, ``transform=`` and ``regularizer=`` are the same API shape:
+a small closed set of built-in options addressed by name, factory-built
+variants that canonicalise back to their parameters, and a clear
+``ValueError`` listing the valid names when a caller typos one.  Before this
+module each axis re-implemented that shape by hand (PR 2's similarity
+registry was the template); :class:`Registry` extracts it so the three axes
+— and any future one (``optimizer=``, a fifth BSI mode's dispatch table) —
+behave identically:
+
+* ``register(name, value)`` / ``@register(name)`` — add an entry;
+* ``get(name)`` — look one up, raising ``ValueError`` with the sorted valid
+  names on a miss;
+* ``resolve(obj)`` — the entry-point face: a registered name returns
+  ``(name, value)``; a registered *value* canonicalises back to its name
+  (so ``similarity=nmi()`` and ``similarity="nmi"`` share every cache);
+  unregistered objects either pass through (``passthrough=`` predicate —
+  similarity accepts arbitrary loss callables) or raise.
+
+Values can be anything hashable-adjacent the axis needs: similarity stores
+loss callables, transform/regularizer store frozen spec dataclasses whose
+instances double as ``RegistrationOptions`` cache-key fields.
+"""
+from __future__ import annotations
+
+__all__ = ["Registry"]
+
+
+class Registry:
+    """A named table of pluggable options with uniform lookup semantics."""
+
+    def __init__(self, kind, *, passthrough=None, hint=None):
+        """``kind`` names the axis in error messages (e.g. ``"similarity"``).
+
+        ``passthrough`` — optional predicate: unregistered objects it accepts
+        resolve to themselves (key == value) instead of raising.  ``hint`` —
+        optional suffix appended to the unknown-name error (e.g. ``"or pass
+        a callable"``).
+        """
+        self.kind = str(kind)
+        self._entries: dict = {}
+        self._passthrough = passthrough
+        self._hint = hint
+
+    def register(self, name, value=None):
+        """Register ``value`` under ``name`` (also usable as a decorator)."""
+        if value is None:
+            return lambda v: self.register(name, v)
+        self._entries[str(name)] = value
+        return value
+
+    def names(self) -> list:
+        """Sorted names of the registered entries."""
+        return sorted(self._entries)
+
+    def __contains__(self, name) -> bool:
+        return str(name) in self._entries
+
+    def items(self):
+        return self._entries.items()
+
+    def _unknown(self, obj):
+        hint = f" {self._hint}" if self._hint else ""
+        return ValueError(
+            f"unknown {self.kind} {obj!r}; choose from {self.names()}{hint}")
+
+    def get(self, name):
+        """The value registered under ``name`` (``ValueError`` on a miss)."""
+        try:
+            return self._entries[str(name)]
+        except KeyError:
+            raise self._unknown(name) from None
+
+    def resolve(self, obj):
+        """Resolve a name-or-value to ``(key, value)``.
+
+        ``key`` is hashable and stable across calls — the registry name
+        where one exists (a registered value canonicalises back to its
+        name, so the name and value spellings share compiled-runner and
+        autotune caches), otherwise the passed-through object itself.
+        """
+        if isinstance(obj, str):
+            return str(obj), self.get(obj)
+        for name, value in self._entries.items():
+            # identity for unhashable values (callables compare by identity
+            # anyway); equality so factory-built frozen specs canonicalise
+            # (velocity() == the registered VelocityTransform())
+            if value is obj or (type(value) is type(obj) and value == obj):
+                return name, value
+        if self._passthrough is not None and self._passthrough(obj):
+            return obj, obj
+        raise self._unknown(obj)

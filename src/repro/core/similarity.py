@@ -31,7 +31,10 @@ import functools
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.registry import Registry
+
 __all__ = [
+    "SIMILARITIES",
     "available_similarities",
     "fused_spec",
     "lncc",
@@ -45,7 +48,16 @@ __all__ = [
     "uniform_filter",
 ]
 
-_REGISTRY: dict = {}
+# The registry instance behind the public helpers below — the same shared
+# ``core.registry.Registry`` shape as ``transform=`` and ``regularizer=``.
+# Custom loss callables pass through unregistered (they are their own key).
+SIMILARITIES = Registry("similarity", passthrough=callable,
+                        hint="or pass a callable")
+
+# Pre-Registry this module kept its entries in a module-level ``_REGISTRY``
+# dict; keep that name bound to the live entry table so existing code (and
+# tests) that mutate it directly keep working.
+_REGISTRY = SIMILARITIES._entries
 
 
 def register_similarity(name, fn=None):
@@ -54,15 +66,12 @@ def register_similarity(name, fn=None):
     ``fn`` must be a scan-safe, ``vmap``-able ``(warped, fixed) -> scalar``
     loss (lower = better) built from traceable jnp ops.
     """
-    if fn is None:
-        return lambda f: register_similarity(name, f)
-    _REGISTRY[str(name)] = fn
-    return fn
+    return SIMILARITIES.register(name, fn)
 
 
 def available_similarities():
     """Sorted names of the registered similarity terms."""
-    return sorted(_REGISTRY)
+    return SIMILARITIES.names()
 
 
 def resolve_similarity(similarity):
@@ -74,18 +83,7 @@ def resolve_similarity(similarity):
     so ``similarity="nmi"`` and ``similarity=nmi()`` share one cache key
     (and one autotune entry) instead of duplicating compiles and sweeps.
     """
-    if callable(similarity):
-        for name, fn in _REGISTRY.items():
-            if fn is similarity:
-                return name, fn
-        return similarity, similarity
-    try:
-        return str(similarity), _REGISTRY[str(similarity)]
-    except KeyError:
-        raise ValueError(
-            f"unknown similarity {similarity!r}; choose from "
-            f"{available_similarities()} or pass a callable"
-        ) from None
+    return SIMILARITIES.resolve(similarity)
 
 
 def fused_spec(similarity):

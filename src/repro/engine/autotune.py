@@ -37,6 +37,8 @@ import numpy as np
 
 from repro.core.interpolate import GRAD_IMPLS, MODES, interpolate
 from repro.core.similarity import resolve_similarity, similarity_token
+from repro.core.transform import (VelocityTransform, resolve_transform,
+                                  scaling_and_squaring, transform_token)
 from repro.kernels.ops import PALLAS_MODES
 
 __all__ = ["BsiChoice", "SCHEMA_VERSION", "autotune_bsi", "autotune_fused",
@@ -154,8 +156,8 @@ def _store_disk(path, key, choice) -> None:
 
 def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
                  cache_path=None, use_cache=True, measure_grad=False,
-                 similarity=None, grad_impls=None,
-                 compute_dtype=None, stop=None) -> BsiChoice:
+                 similarity=None, grad_impls=None, compute_dtype=None,
+                 transform=None, stop=None) -> BsiChoice:
     """Benchmark the candidate BSI forms and return (and cache) the winner.
 
     Args:
@@ -186,6 +188,13 @@ def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
         dtype — what the registration loop will actually execute — and the
         cache entry is per-dtype, so fp32 and bf16 callers never share a
         possibly-differently-ranked winner.
+      transform: optional transform name/spec (``repro.core.transform``).
+        With the velocity transform (and ``measure_grad`` + ``similarity``),
+        the timed objective integrates the expansion by scaling and squaring
+        before the warp — the velocity loop's actual per-step workload,
+        whose composition chain changes what XLA fuses around each BSI form.
+        The cache entry gains a ``|tf=...`` token only for non-displacement
+        transforms, so existing displacement entries stay valid.
       stop: must stay ``None``.  The timing workload is one fixed
         forward+backward step — early stopping (``ConvergenceConfig``)
         changes how *many* steps a given pair runs, never the per-step cost
@@ -203,6 +212,8 @@ def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
     channels = int(channels)
     compute_dtype = (jnp.dtype(compute_dtype).name
                      if compute_dtype is not None else None)
+    tspec = resolve_transform(transform) if transform is not None else None
+    velocity = isinstance(tspec, VelocityTransform)
     cands = (default_candidates() if candidates is None
              else tuple(candidates))
     gis = ("xla",) if grad_impls is None else tuple(grad_impls)
@@ -219,6 +230,7 @@ def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
            + ("" if similarity is None
               else f"|sim={similarity_token(similarity)}")
            + ("" if compute_dtype is None else f"|cd={compute_dtype}")
+           + (f"|tf={transform_token(tspec)}" if velocity else "")
            + "|" + ",".join("/".join(c) for c in cands))
     cache_path = default_cache_path() if cache_path is None else cache_path
     mem_key = (cache_path, key)
@@ -257,6 +269,8 @@ def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
                                              jnp.float32), dev)
 
             def objective(out):
+                if velocity:
+                    out = scaling_and_squaring(out, tspec.squarings)
                 warped = warp_volume(mov, out, compute_dtype=compute_dtype)
                 return sim_fn(warped.astype(fix.dtype), fix)
         else:
@@ -499,9 +513,17 @@ def resolve_options(options, vol_shape):
         grad_impl=opts.grad_impl,  # the adjoint axis is tuned jointly
         measure_grad=True,  # the loop's workload is forward+backward BSI
         similarity=opts.similarity,  # ... its backward mix is per-similarity
-        compute_dtype=opts.compute_dtype)  # ... measured/cached per dtype
+        compute_dtype=opts.compute_dtype,  # ... measured/cached per dtype
+        transform=opts.transform)  # ... velocity integrates before the warp
     opts = opts.replace(mode=mode, impl=impl, grad_impl=grad_impl)
+    is_velocity = isinstance(opts.transform, VelocityTransform)
     if opts.fused == "on":
+        if is_velocity:  # unreachable via RegistrationOptions (which raises
+            # at construction), but resolve_options is also a public face
+            raise ValueError(
+                "fused='on' is incompatible with transform='velocity': the "
+                "fused level step cannot interleave scaling-and-squaring "
+                "compositions; use fused='auto' or 'off'")
         ok, why = kops.fused_supported(vol_shape, fused_spec(opts.similarity))
         if not ok:
             raise ValueError(
@@ -509,9 +531,12 @@ def resolve_options(options, vol_shape):
                 "use fused='auto' (or 'off') to fall back to the unfused "
                 "level step")
     elif opts.fused == "auto":
-        choice = autotune_fused(
-            grid_shape, opts.tile, vol_shape,
-            base=BsiChoice(mode, impl, 0.0, grad_impl),
-            similarity=opts.similarity, compute_dtype=opts.compute_dtype)
-        opts = opts.replace(fused=choice.fused)
+        if is_velocity:  # no race: the fused step has no velocity path yet
+            opts = opts.replace(fused="off")
+        else:
+            choice = autotune_fused(
+                grid_shape, opts.tile, vol_shape,
+                base=BsiChoice(mode, impl, 0.0, grad_impl),
+                similarity=opts.similarity, compute_dtype=opts.compute_dtype)
+            opts = opts.replace(fused=choice.fused)
     return opts

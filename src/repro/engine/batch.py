@@ -28,7 +28,10 @@ import jax.numpy as jnp
 
 from repro.core import ffd
 from repro.core.options import UNSET, merge_legacy_options
+from repro.core.regularizer import regularizer_term
 from repro.core.similarity import resolve_similarity
+from repro.core.transform import (VelocityTransform, dense_displacement,
+                                  resolve_transform)
 from repro.engine.convergence import adam_until, level_live, plateau_step
 from repro.engine.loop import adam_scan
 
@@ -54,8 +57,9 @@ class BatchRegistrationResult:
 
 def ffd_level_loss(f, mov, *, tile, bending_weight, mode, impl,
                    grad_impl="xla", compute_dtype=None, similarity="ssd",
+                   transform="displacement", regularizer="none",
                    fused="off"):
-    """Similarity + bending-energy objective for one pyramid level.
+    """Similarity + regularisation objective for one pyramid level.
 
     ``similarity`` is a registered name or a ``(warped, fixed) -> scalar``
     loss callable (lower = better; see ``repro.core.similarity``).  Shared
@@ -66,44 +70,64 @@ def ffd_level_loss(f, mov, *, tile, bending_weight, mode, impl,
     ``compute_dtype`` runs the BSI expansion + warp in reduced precision
     (params, adjoint accumulation and the objective stay fp32).
 
+    ``transform`` (name or spec, see ``repro.core.transform``) picks how
+    the control grid becomes a displacement: classic FFD (default) or a
+    stationary velocity field integrated by scaling and squaring.
+    ``regularizer`` (see ``repro.core.regularizer``) picks the smoothness
+    term: ``"none"`` keeps the historical ``bending_weight``
+    finite-difference proxy; ``"bending"`` replaces it with the analytic
+    B-spline bending energy at the spec's own weight.
+
     ``fused="on"`` (or ``True``) swaps the similarity term for the fused
     Pallas level step (``core.ffd.fused_warp_loss``): BSI displacement +
     warp + similarity partial sums in one VMEM pass, no ``(X, Y, Z, 3)``
     field or warped volume in HBM, with the gradient recomputed through the
     unfused composition (so it is identical).  Requires a similarity with a
-    fused accumulator; the bending term stays outside (it reads only the
-    control grid).
+    fused accumulator and the ``displacement`` transform (the megakernel
+    cannot interleave velocity compositions); the regularisation term stays
+    outside (it reads only the control grid).
     """
     vol_shape = f.shape
     _, sim = resolve_similarity(similarity)
+    tspec = resolve_transform(transform)
+    gshape = ffd.grid_shape_for_volume(vol_shape, tile)
+    reg = regularizer_term(regularizer, grid_shape=gshape, tile=tile,
+                           bending_weight=bending_weight)
 
     if fused in ("on", True):
+        if isinstance(tspec, VelocityTransform):
+            raise ValueError(
+                "fused='on' cannot run the velocity transform: the fused "
+                "level step has no scaling-and-squaring composition; use "
+                "fused='off' (or 'auto') with transform='velocity'")
+
         def loss_fn(p):
             simloss = ffd.fused_warp_loss(
                 p, mov, f, tile, similarity=similarity, mode=mode, impl=impl,
                 grad_impl=grad_impl, compute_dtype=compute_dtype)
-            return simloss + bending_weight * ffd.bending_energy(p)
+            return simloss + reg(p)
 
         return loss_fn
 
     def loss_fn(p):
-        disp = ffd.dense_field(p, tile, vol_shape, mode=mode, impl=impl,
-                               grad_impl=grad_impl,
-                               compute_dtype=compute_dtype)
+        disp = dense_displacement(tspec, p, tile, vol_shape, mode=mode,
+                                  impl=impl, grad_impl=grad_impl,
+                                  compute_dtype=compute_dtype)
         warped = ffd.warp_volume(mov, disp, compute_dtype=compute_dtype)
         # score the objective in fp32 regardless of input dtype: casting to
         # f.dtype would silently score a bf16 fixed volume (similarity AND
-        # its trade-off against the fp32 bending term) in bf16
+        # its trade-off against the fp32 regulariser) in bf16
         warped = warped.astype(jnp.float32)
         fixed32 = f.astype(jnp.float32)
-        return sim(warped, fixed32) + bending_weight * ffd.bending_energy(p)
+        return sim(warped, fixed32) + reg(p)
 
     return loss_fn
 
 
 def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
                  mode, impl, grad_impl="xla", compute_dtype=None,
-                 similarity="ssd", stop=None, fused="off"):
+                 similarity="ssd", transform="displacement",
+                 regularizer="none", stop=None, fused="off"):
     """Pure multi-level FFD registration of ONE ``(fixed, moving)`` pair.
 
     Traceable end-to-end (no timing, no host sync): the levels unroll into
@@ -132,7 +156,8 @@ def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
                                  bending_weight=bending_weight,
                                  mode=mode, impl=impl, grad_impl=grad_impl,
                                  compute_dtype=compute_dtype,
-                                 similarity=similarity, fused=fused)
+                                 similarity=similarity, transform=transform,
+                                 regularizer=regularizer, fused=fused)
         if stop is None:
             phi, trace = adam_scan(loss_fn, phi, iters=iters, lr=lr)
         else:
@@ -140,8 +165,8 @@ def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
             steps.append(taken)
         finals.append(trace[-1])
 
-    disp = ffd.dense_field(phi, tile, fixed.shape, mode=mode, impl=impl,
-                           grad_impl=grad_impl)
+    disp = dense_displacement(transform, phi, tile, fixed.shape, mode=mode,
+                              impl=impl, grad_impl=grad_impl)
     warped = ffd.warp_volume(moving, disp)
     if stop is None:
         return warped, phi, jnp.stack(finals)
@@ -168,6 +193,8 @@ def _compiled_batch(vol_shape, options, mesh=None):
                                      o.bending_weight, o.mode, o.impl,
                                      o.similarity, grad_impl=o.grad_impl,
                                      compute_dtype=o.compute_dtype,
+                                     transform=o.transform,
+                                     regularizer=o.regularizer,
                                      stop=o.stop, fused=o.fused)
 
     def single(f, m):
@@ -176,7 +203,8 @@ def _compiled_batch(vol_shape, options, mesh=None):
                             bending_weight=o.bending_weight,
                             mode=o.mode, impl=o.impl, grad_impl=o.grad_impl,
                             compute_dtype=o.compute_dtype,
-                            similarity=o.similarity, stop=o.stop,
+                            similarity=o.similarity, transform=o.transform,
+                            regularizer=o.regularizer, stop=o.stop,
                             fused=o.fused)
 
     return jax.jit(jax.vmap(single))
@@ -185,7 +213,8 @@ def _compiled_batch(vol_shape, options, mesh=None):
 def register_batch(fixed, moving, *, options=None, tile=UNSET, levels=UNSET,
                    iters=UNSET, lr=UNSET, bending_weight=UNSET, mode=UNSET,
                    impl=UNSET, grad_impl=UNSET, compute_dtype=UNSET,
-                   similarity=UNSET, mesh=None, stop=UNSET):
+                   similarity=UNSET, transform=UNSET, regularizer=UNSET,
+                   mesh=None, stop=UNSET):
     """Register a batch of volume pairs in a single jitted program.
 
     Args:
@@ -202,6 +231,11 @@ def register_batch(fixed, moving, *, options=None, tile=UNSET, levels=UNSET,
         ``"bfloat16"``) runs BSI + warp in reduced precision with fp32
         params/adjoint accumulation.  ``similarity`` is a registered name
         (``"ssd" | "ncc" | "lncc" | "nmi"``) or a loss callable.
+        ``transform`` (``"displacement" | "velocity"`` or a
+        ``repro.core.transform`` spec) picks the deformation model —
+        ``"velocity"`` yields diffeomorphic, fold-free warps; ``regularizer``
+        (``"none" | "bending"`` or a ``repro.core.regularizer`` spec) picks
+        the smoothness term.
       mesh: optional ``jax.sharding.Mesh`` (see
         ``engine.shard.make_registration_mesh``) — the batch axis shards
         over the mesh's data axes (``REGISTRATION_RULES``), one program
@@ -243,7 +277,8 @@ def register_batch(fixed, moving, *, options=None, tile=UNSET, levels=UNSET,
         dict(tile=tile, levels=levels, iters=iters, lr=lr,
              bending_weight=bending_weight, mode=mode, impl=impl,
              grad_impl=grad_impl, compute_dtype=compute_dtype,
-             similarity=similarity, stop=stop))
+             similarity=similarity, transform=transform,
+             regularizer=regularizer, stop=stop))
 
     from repro.engine.autotune import resolve_options
 
@@ -304,7 +339,8 @@ def _lane_vg(f, m, options):
     return jax.value_and_grad(ffd_level_loss(
         f, m, tile=o.tile, bending_weight=o.bending_weight, mode=o.mode,
         impl=o.impl, grad_impl=o.grad_impl, compute_dtype=o.compute_dtype,
-        similarity=o.similarity, fused=o.fused))
+        similarity=o.similarity, transform=o.transform,
+        regularizer=o.regularizer, fused=o.fused))
 
 
 @functools.lru_cache(maxsize=128)
@@ -413,8 +449,9 @@ def compile_finish(vol_shape, options):
     o = options
 
     def fin(phi, moving):
-        disp = ffd.dense_field(phi, o.tile, vol_shape, mode=o.mode,
-                               impl=o.impl, grad_impl=o.grad_impl)
+        disp = dense_displacement(o.transform, phi, o.tile, vol_shape,
+                                  mode=o.mode, impl=o.impl,
+                                  grad_impl=o.grad_impl)
         return ffd.warp_volume(moving, disp)
 
     return jax.jit(fin)

@@ -35,6 +35,12 @@ runs one scheduling round, and the caller (the asyncio facade
 drive loop.  Admission control (``max_queue`` -> :class:`QueueFull`) and
 deadlines (``timeout`` -> :class:`RegistrationTimeout`) fail fast and
 clean instead of hanging.
+
+The lane programs inherit the full ``RegistrationOptions`` surface through
+``engine.batch``'s option-keyed compiles — including the ``transform=``
+(diffeomorphic velocity fields) and ``regularizer=`` (analytic bending
+energy) axes, which change only the per-lane loss/finish programs, not the
+scheduling mechanics.
 """
 from __future__ import annotations
 

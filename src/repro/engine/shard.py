@@ -131,8 +131,9 @@ def lane_sharding(mesh):
 
 def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
                      bending_weight, mode, impl, similarity, mesh,
-                     grad_impl="xla", compute_dtype=None, rules=None,
-                     stop=None, fused="off"):
+                     grad_impl="xla", compute_dtype=None,
+                     transform="displacement", regularizer="none",
+                     rules=None, stop=None, fused="off"):
     """Batched multi-level FFD with explicit sharding constraints.
 
     Same math as ``jax.vmap(engine.batch.ffd_pipeline)`` — the pyramid, the
@@ -182,6 +183,7 @@ def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
                 f1, m1, tile=tile, bending_weight=bending_weight,
                 mode=mode, impl=impl, grad_impl=grad_impl,
                 compute_dtype=compute_dtype, similarity=similarity,
+                transform=transform, regularizer=regularizer,
                 fused=fused)
             if stop is None:
                 return adam_scan(loss_fn, p1, iters=iters, lr=lr)
@@ -195,8 +197,10 @@ def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
         finals.append(trace[:, -1])
 
     def finish(m1, p1):
-        disp = ffd.dense_field(p1, tile, m1.shape, mode=mode, impl=impl,
-                               grad_impl=grad_impl)
+        from repro.core.transform import dense_displacement
+
+        disp = dense_displacement(transform, p1, tile, m1.shape, mode=mode,
+                                  impl=impl, grad_impl=grad_impl)
         return ffd.warp_volume(m1, disp)
 
     warped = cons(jax.vmap(finish)(moving, phi), VOLUME_AXES)
@@ -208,8 +212,9 @@ def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
 
 def compile_sharded_batch(mesh, tile, levels, iters, lr,
                           bending_weight, mode, impl, similarity,
-                          grad_impl="xla", compute_dtype=None, stop=None,
-                          fused="off"):
+                          grad_impl="xla", compute_dtype=None,
+                          transform="displacement", regularizer="none",
+                          stop=None, fused="off"):
     """Build the jitted sharded pipeline for one (mesh, configuration).
 
     Uncached by design: ``engine.batch._compiled_batch`` is the single
@@ -232,7 +237,8 @@ def compile_sharded_batch(mesh, tile, levels, iters, lr,
             F, M, tile=tile, levels=levels, iters=iters, lr=lr,
             bending_weight=bending_weight, mode=mode, impl=impl,
             grad_impl=grad_impl, compute_dtype=compute_dtype,
-            similarity=similarity, mesh=mesh, rules=rules, stop=stop,
+            similarity=similarity, transform=transform,
+            regularizer=regularizer, mesh=mesh, rules=rules, stop=stop,
             fused=fused)
 
     return jax.jit(batched, in_shardings=(vol_sh, vol_sh),

@@ -31,11 +31,18 @@ SMALL = dict(tile=(6, 6, 6), levels=2, iters=4, lr=0.1,
 
 class TestValidation:
     def test_defaults_match_legacy_ffd_signature(self):
+        from repro.core.regularizer import NoRegularizer
+        from repro.core.transform import DisplacementTransform
+
         o = RegistrationOptions()
         assert (o.tile, o.levels, o.iters, o.lr) == ((5, 5, 5), 2, 40, 0.5)
         assert o.bending_weight == 5e-3
         assert (o.mode, o.impl, o.grad_impl) == ("auto", "auto", "auto")
         assert o.similarity == "ssd" and o.stop is None
+        # the new axes default to the historical behaviour (classic FFD,
+        # legacy bending proxy), normalised to their spec instances
+        assert o.transform == DisplacementTransform()
+        assert o.regularizer == NoRegularizer()
 
     def test_tile_coerced_to_int_tuple(self):
         assert RegistrationOptions(tile=[6.0, 5, 4]).tile == (6, 5, 4)
@@ -51,10 +58,29 @@ class TestValidation:
 
     @pytest.mark.parametrize("bad", [
         dict(mode="nope"), dict(impl="cuda"), dict(grad_impl="nope"),
+        dict(transform="affine"), dict(regularizer="tv"),
+        dict(fused="on", transform="velocity"),
     ])
     def test_backend_name_errors(self, bad):
         with pytest.raises(ValueError):
             RegistrationOptions(**bad)
+
+    def test_transform_regularizer_normalise_to_specs(self):
+        from repro.core.regularizer import BendingRegularizer, bending
+        from repro.core.transform import VelocityTransform, velocity
+
+        o = RegistrationOptions(transform="velocity", regularizer="bending")
+        assert isinstance(o.transform, VelocityTransform)
+        assert isinstance(o.regularizer, BendingRegularizer)
+        # name and factory spellings hash equal -> one program cache entry
+        p = RegistrationOptions(transform=velocity(),
+                                regularizer=bending())
+        assert o == p and hash(o) == hash(p)
+        # parameterised variants are distinct keys
+        q = RegistrationOptions(transform=velocity(squarings=3),
+                                regularizer=bending(weight=1e-2))
+        assert q != o and q.transform.squarings == 3
+        assert q.regularizer.weight == 1e-2
 
     def test_stop_type_error(self):
         with pytest.raises(TypeError):
@@ -92,6 +118,13 @@ class TestValidation:
         assert a.tile == base.tile and a.levels == base.levels
         assert a.compute_dtype is None
 
+    def test_for_affine_pins_transform_and_regularizer(self):
+        o = RegistrationOptions(transform="velocity", regularizer="bending")
+        a = o.for_affine()
+        base = RegistrationOptions()
+        assert a.transform == base.transform
+        assert a.regularizer == base.regularizer
+
 
 class TestDeprecationShim:
     def test_mixing_options_and_kwargs_raises(self):
@@ -127,6 +160,19 @@ class TestDeprecationShim:
         deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
         assert len(deps) == 2
         assert "iters" in str(deps[0].message)
+
+    def test_warning_names_the_passed_fields(self):
+        _reset_deprecation_registry()
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            merge_legacy_options(
+                "fn", None, dict(iters=3, transform="velocity", lr=UNSET),
+                stacklevel=2)
+        deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+        assert len(deps) == 1
+        # the suggested replacement spells out the fields actually passed
+        msg = str(deps[0].message)
+        assert "RegistrationOptions(iters=..., transform=...)" in msg
 
     def test_make_adam_runner_requires_a_config(self):
         from repro.engine.loop import make_adam_runner
@@ -208,6 +254,26 @@ class TestBitwiseEquivalence:
         viaopts = register_batch(F, M, options=RegistrationOptions(**SMALL))
         assert np.array_equal(np.asarray(legacy.warped),
                               np.asarray(viaopts.warped))
+
+    def test_ffd_register_transform_regularizer_kwargs(self):
+        """The legacy-kwarg spelling covers the new fields, bit for bit."""
+        from repro.core.registration import ffd_register
+
+        f, m = _pair(5)
+        _reset_deprecation_registry()
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            legacy = ffd_register(f, m, transform="velocity",
+                                  regularizer="bending", **SMALL)
+        deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+        assert deps and "transform" in str(deps[0].message)
+        viaopts = ffd_register(f, m, options=RegistrationOptions(
+            transform="velocity", regularizer="bending", **SMALL))
+        assert np.array_equal(np.asarray(legacy.warped),
+                              np.asarray(viaopts.warped))
+        assert np.array_equal(np.asarray(legacy.params),
+                              np.asarray(viaopts.params))
+        assert legacy.losses == viaopts.losses
 
     def test_mixing_raises_at_entry_points(self):
         from repro.core.registration import ffd_register

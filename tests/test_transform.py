@@ -1,0 +1,322 @@
+"""Transform & regularizer layer: diffeomorphic velocity fields + analytic
+bending energy behind the shared registry API.
+
+Covers the ISSUE-8 acceptance points: velocity invertibility (forward ∘
+inverse under a voxel-milli tolerance), fold-freedom (min Jacobian
+determinant > 0) on a pair where displacement-FFD folds — at no
+similarity-loss excess — the analytic bending gradient matching autodiff of
+the energy, ``stop=`` / ``vmap`` / mesh parity for the velocity transform,
+and ``fused="on" + velocity`` raising.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ffd
+from repro.core.options import RegistrationOptions
+from repro.core.registration import ffd_register
+from repro.core.registry import Registry
+from repro.core.regularizer import (REGULARIZERS, BendingRegularizer,
+                                    available_regularizers, bending,
+                                    bending_energy_fn, bending_gram_matrices,
+                                    regularizer_term, regularizer_token,
+                                    resolve_regularizer)
+from repro.core.similarity import (SIMILARITIES, available_similarities,
+                                   resolve_similarity, ssd)
+from repro.core.transform import (TRANSFORMS, VelocityTransform,
+                                  available_transforms, compose_displacement,
+                                  dense_displacement, jacobian_determinant,
+                                  resolve_transform, scaling_and_squaring,
+                                  transform_token, velocity)
+from repro.data.volumes import make_pair
+from repro.engine.batch import ffd_level_loss, register_batch
+from repro.engine.convergence import ConvergenceConfig
+
+# concrete BSI axes: no autotune variance, one compile per shape
+CONCRETE = dict(mode="separable", impl="jnp", grad_impl="xla", fused="off")
+
+
+def _smooth_velocity_grid(gshape, scale=0.5):
+    """A smooth (sinusoidal) velocity control grid — low curvature, so the
+    trilinear composition error of scaling-and-squaring stays tiny."""
+    ii, jj, kk = np.meshgrid(*(np.arange(n) for n in gshape), indexing="ij")
+    base = np.stack([np.sin(0.6 * ii + 0.3 * jj),
+                     np.cos(0.5 * jj + 0.2 * kk),
+                     np.sin(0.4 * kk + 0.25 * ii)], axis=-1)
+    return jnp.asarray(scale * base, jnp.float32)
+
+
+# --- the shared registry helper ---------------------------------------------
+
+
+class TestRegistry:
+    def test_unknown_name_lists_options(self):
+        reg = Registry("widget")
+        reg.register("a", 1)
+        reg.register("b", 2)
+        with pytest.raises(ValueError, match=r"unknown widget 'c'.*'a', 'b'"):
+            reg.get("c")
+        assert reg.names() == ["a", "b"]
+        assert "a" in reg and "c" not in reg
+
+    def test_registered_value_canonicalises_to_its_name(self):
+        reg = Registry("widget")
+        obj = object()
+        reg.register("x", obj)
+        assert reg.resolve("x") == ("x", obj)
+        assert reg.resolve(obj) == ("x", obj)
+
+    def test_passthrough_predicate(self):
+        reg = Registry("widget", passthrough=callable, hint="or a callable")
+        fn = lambda: None  # noqa: E731
+        key, val = reg.resolve(fn)
+        assert key is fn and val is fn
+        with pytest.raises(ValueError, match="or a callable"):
+            reg.resolve(123)
+
+    def test_similarity_public_surface_unchanged(self):
+        # similarity.py migrated onto Registry with its exact public API
+        assert isinstance(SIMILARITIES, Registry)
+        assert set(available_similarities()) >= {"ssd", "ncc", "lncc", "nmi"}
+        key, fn = resolve_similarity("ssd")
+        assert key == "ssd" and fn is ssd
+        custom = lambda w, f: jnp.mean(jnp.abs(w - f))  # noqa: E731
+        key, fn = resolve_similarity(custom)
+        assert key is custom and fn is custom
+        with pytest.raises(ValueError, match="unknown similarity"):
+            resolve_similarity("nope")
+
+    def test_transform_and_regularizer_registries(self):
+        assert available_transforms() == ["displacement", "velocity"]
+        assert available_regularizers() == ["bending", "none"]
+        assert resolve_transform("velocity") == VelocityTransform()
+        assert resolve_transform(velocity(squarings=4)).squarings == 4
+        assert resolve_regularizer("bending") == BendingRegularizer()
+        assert TRANSFORMS.resolve(VelocityTransform())[0] == "velocity"
+        assert REGULARIZERS.resolve(BendingRegularizer())[0] == "bending"
+        with pytest.raises(ValueError, match="unknown transform"):
+            resolve_transform("affine")
+        with pytest.raises(ValueError, match="unknown regularizer"):
+            resolve_regularizer("tv")
+
+    def test_tokens_and_spec_validation(self):
+        assert transform_token("displacement") == "displacement"
+        assert transform_token(velocity(4)) == "velocity(squarings=4)"
+        assert regularizer_token("none") == "none"
+        assert regularizer_token(bending(2e-3)) == "bending(weight=0.002)"
+        with pytest.raises(ValueError):
+            velocity(squarings=0)
+        with pytest.raises(ValueError):
+            bending(weight=-1.0)
+
+
+# --- velocity transform mechanics -------------------------------------------
+
+
+class TestVelocity:
+    def test_invertibility(self):
+        """forward ∘ inverse displacement stays under 1e-3 voxels inside."""
+        tile, vol = (8, 8, 8), (40, 40, 40)
+        gshape = ffd.grid_shape_for_volume(vol, tile)
+        phi = _smooth_velocity_grid(gshape)
+        fwd = dense_displacement("velocity", phi, tile, vol, **{
+            k: CONCRETE[k] for k in ("mode", "impl", "grad_impl")})
+        inv = dense_displacement("velocity", phi, tile, vol, inverse=True, **{
+            k: CONCRETE[k] for k in ("mode", "impl", "grad_impl")})
+        assert float(jnp.max(jnp.abs(fwd))) > 0.2  # a real deformation
+        resid = compose_displacement(inv, fwd)  # (id+inv) ∘ (id+fwd) - id
+        interior = jnp.abs(resid)[2:-2, 2:-2, 2:-2]
+        assert float(jnp.max(interior)) <= 1e-3
+
+    def test_scaling_and_squaring_small_field_is_near_linear(self):
+        # exp(v) ≈ v for tiny v: the integrator must not distort it
+        tile, vol = (6, 6, 6), (18, 18, 18)
+        gshape = ffd.grid_shape_for_volume(vol, tile)
+        phi = _smooth_velocity_grid(gshape, scale=1e-3)
+        vel_field = ffd.dense_field(phi, tile, vol)
+        integrated = scaling_and_squaring(vel_field, 6)
+        assert float(jnp.max(jnp.abs(integrated - vel_field))) < 1e-5
+
+    def test_jacobian_determinant_identity_and_fold(self):
+        disp = jnp.zeros((8, 8, 8, 3), jnp.float32)
+        assert np.allclose(np.asarray(jacobian_determinant(disp)), 1.0)
+        # u_x = -2x reflects the x axis: det(J) = 1 - 2 = -1 everywhere
+        x = jnp.arange(8, dtype=jnp.float32)
+        fold = disp.at[..., 0].set(-2.0 * x[:, None, None])
+        assert np.allclose(np.asarray(jacobian_determinant(fold)), -1.0)
+
+    def test_displacement_has_no_inverse(self):
+        phi = jnp.zeros((5, 5, 5, 3), jnp.float32)
+        with pytest.raises(ValueError, match="no analytic"):
+            dense_displacement("displacement", phi, (4, 4, 4), (8, 8, 8),
+                               inverse=True)
+
+
+# --- the analytic bending energy --------------------------------------------
+
+
+class TestBendingEnergy:
+    def test_gram_matrices_symmetric_and_partition_of_unity(self):
+        for n in (5, 8, 11):
+            g0, g1, g2 = (np.asarray(g) for g in bending_gram_matrices(n))
+            for g in (g0, g1, g2):
+                assert np.allclose(g, g.T, atol=1e-6)
+            # Σ_i β(s-i+1) = 1 on the domain, so G⁰'s total mass is the
+            # domain length T = n - 3 and G¹/G² rows of the constant
+            # coefficient vector annihilate (derivatives of a constant)
+            ones = np.ones(n)
+            assert np.isclose(ones @ g0 @ ones, n - 3, atol=1e-5)
+            assert np.isclose(ones @ g1 @ ones, 0.0, atol=1e-6)
+            assert np.isclose(ones @ g2 @ ones, 0.0, atol=1e-6)
+
+    def test_energy_zero_for_constant_and_linear_fields(self):
+        energy = bending_energy_fn((8, 7, 9), (5, 5, 5))
+        const = jnp.ones((8, 7, 9, 3), jnp.float32) * 2.5
+        assert abs(float(energy(const))) < 1e-8
+        ii = jnp.arange(8, dtype=jnp.float32)[:, None, None, None]
+        linear = jnp.broadcast_to(0.3 * ii, (8, 7, 9, 3))
+        assert abs(float(energy(linear))) < 1e-6
+
+    def test_analytic_gradient_matches_autodiff(self):
+        """The closed-form ∇E = 2Qφ custom VJP == autodiff of the energy."""
+        energy = bending_energy_fn((10, 9, 11), (4, 5, 6))
+        rng = np.random.default_rng(0)
+        phi = jnp.asarray(rng.standard_normal((10, 9, 11, 3)), jnp.float32)
+        g_analytic = jax.grad(energy)(phi)
+        g_autodiff = jax.grad(energy.reference)(phi)
+        denom = max(float(jnp.max(jnp.abs(g_autodiff))), 1e-12)
+        rel = float(jnp.max(jnp.abs(g_analytic - g_autodiff))) / denom
+        assert rel <= 1e-5
+
+    def test_none_term_is_the_legacy_proxy(self):
+        rng = np.random.default_rng(1)
+        phi = jnp.asarray(rng.standard_normal((7, 8, 6, 3)), jnp.float32)
+        term = regularizer_term("none", grid_shape=(7, 8, 6), tile=(5, 5, 5),
+                                bending_weight=5e-3)
+        expect = 5e-3 * ffd.bending_energy(phi)
+        assert float(term(phi)) == float(expect)  # bit-identical
+
+    def test_bending_term_replaces_proxy_at_factory_weight(self):
+        rng = np.random.default_rng(2)
+        phi = jnp.asarray(rng.standard_normal((7, 8, 6, 3)), jnp.float32)
+        energy = bending_energy_fn((7, 8, 6), (5, 5, 5))
+        term = regularizer_term(bending(2e-3), grid_shape=(7, 8, 6),
+                                tile=(5, 5, 5), bending_weight=123.0)
+        assert np.isclose(float(term(phi)), 2e-3 * float(energy(phi)),
+                          rtol=1e-6)
+
+
+# --- the registered axes through the registration stack ---------------------
+
+
+class TestRegistrationIntegration:
+    def test_velocity_fold_free_where_displacement_folds(self):
+        """The IGS-safety workload: an aggressive synthetic pneumoperitoneum
+        that classic FFD can only match by folding space; the velocity
+        transform (+ analytic bending) stays diffeomorphic (min Jacobian
+        determinant > 0) at no similarity cost (well under the 5% excess
+        budget — it is in fact better)."""
+        shape, tile = (22, 20, 18), (4, 4, 4)
+        fixed, moving, _ = make_pair(shape, tile=tile, magnitude=8.0, seed=3)
+        # bending_weight=0: the raw FFD objective, which matches this pair
+        # only by folding; the velocity run swaps in the analytic bending
+        # regularizer (which ignores the legacy proxy weight entirely)
+        opts = RegistrationOptions(tile=tile, levels=2, iters=60, lr=0.5,
+                                   bending_weight=0.0, **CONCRETE)
+        r_disp = ffd_register(fixed, moving, options=opts)
+        r_vel = ffd_register(fixed, moving, options=opts.replace(
+            transform="velocity", regularizer=bending(3e-3)))
+
+        def min_jac(opts1, phi):
+            disp = dense_displacement(opts1.transform, phi, tile, shape,
+                                      mode=opts1.mode, impl=opts1.impl)
+            return float(jnp.min(jacobian_determinant(disp)))
+
+        def sim(res):
+            return float(jnp.mean((res.warped - fixed) ** 2))
+
+        mj_disp = min_jac(opts, r_disp.params)
+        mj_vel = min_jac(opts.replace(transform="velocity"), r_vel.params)
+        assert mj_disp < 0.0          # classic FFD folds on this pair
+        assert mj_vel > 0.0           # the velocity warp stays orientation-
+        #                               preserving everywhere
+        assert sim(r_vel) <= 1.05 * sim(r_disp)  # <= 5% similarity excess
+
+    def test_velocity_vmap_parity(self):
+        """register_batch's vmapped velocity pipeline == per-pair loop."""
+        shape, tile = (20, 18, 16), (5, 5, 5)
+        pairs = [make_pair(shape, tile=tile, magnitude=2.0, seed=s)
+                 for s in (0, 1)]
+        F = jnp.stack([p[0] for p in pairs])
+        M = jnp.stack([p[1] for p in pairs])
+        opts = RegistrationOptions(tile=tile, levels=2, iters=4, lr=0.3,
+                                   transform="velocity",
+                                   regularizer=bending(1e-4), **CONCRETE)
+        res = register_batch(F, M, options=opts)
+        for b, (f, m, _) in enumerate(pairs):
+            solo = ffd_register(f, m, options=opts)
+            np.testing.assert_allclose(np.asarray(res.warped[b]),
+                                       np.asarray(solo.warped), atol=2e-5)
+
+    def test_velocity_stop_parity(self):
+        """The early-stopped while_loop path runs the velocity objective."""
+        shape, tile = (20, 18, 16), (5, 5, 5)
+        fixed, moving, _ = make_pair(shape, tile=tile, magnitude=2.0, seed=0)
+        opts = RegistrationOptions(tile=tile, levels=2, iters=12, lr=0.3,
+                                   transform="velocity",
+                                   stop=ConvergenceConfig(tol=1e-3,
+                                                          patience=2),
+                                   **CONCRETE)
+        res = ffd_register(fixed, moving, options=opts)
+        assert res.steps is not None and len(res.steps) == 2
+        assert all(1 <= s <= 12 for s in res.steps)
+        assert np.isfinite(res.losses).all()
+        # the full-budget run shares the objective: same loss at same step
+        full = ffd_register(fixed, moving, options=opts.replace(stop=None))
+        assert res.losses[-1] <= full.losses[-1] * 1.5 + 1e-6
+
+    def test_velocity_mesh_parity(self):
+        """The mesh-sharded batch == the single-device batch for velocity."""
+        from repro.engine.shard import make_registration_mesh
+
+        shape, tile = (20, 18, 16), (5, 5, 5)
+        n = min(len(jax.devices()), 4)
+        pairs = [make_pair(shape, tile=tile, magnitude=2.0, seed=s)
+                 for s in range(max(n, 2) + 1)]  # non-divisible: pad path
+        F = jnp.stack([p[0] for p in pairs])
+        M = jnp.stack([p[1] for p in pairs])
+        opts = RegistrationOptions(tile=tile, levels=2, iters=4, lr=0.3,
+                                   transform="velocity", **CONCRETE)
+        base = register_batch(F, M, options=opts)
+        sharded = register_batch(F, M, options=opts,
+                                 mesh=make_registration_mesh(n))
+        np.testing.assert_allclose(np.asarray(sharded.warped),
+                                   np.asarray(base.warped), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(sharded.losses),
+                                   np.asarray(base.losses), rtol=2e-5)
+
+    def test_fused_on_velocity_raises(self):
+        with pytest.raises(ValueError, match="fused='on' is incompatible"):
+            RegistrationOptions(fused="on", transform="velocity")
+        f = jnp.zeros((16, 16, 16), jnp.float32)
+        with pytest.raises(ValueError, match="fused='on' cannot run"):
+            ffd_level_loss(f, f, tile=(5, 5, 5), bending_weight=0.0,
+                           mode="separable", impl="jnp",
+                           transform="velocity", fused="on")
+
+    def test_fused_auto_velocity_resolves_off(self):
+        from repro.engine.autotune import resolve_options
+
+        opts = RegistrationOptions(tile=(5, 5, 5), transform="velocity",
+                                   mode="separable", impl="jnp",
+                                   grad_impl="xla", fused="auto")
+        resolved = resolve_options(opts, (20, 18, 16))
+        assert resolved.fused == "off"
+
+    def test_velocity_options_cache_key_distinct(self):
+        a = RegistrationOptions(transform="velocity")
+        b = RegistrationOptions(transform=velocity(squarings=3))
+        c = RegistrationOptions()
+        assert a != b and a != c and hash(a) != hash(c)
+        assert a == RegistrationOptions(transform=velocity())
