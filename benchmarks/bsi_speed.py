@@ -48,8 +48,9 @@ from benchmarks.common import FULL_VOLUMES, SCALED_VOLUMES, emit, grid_for, time
 from repro.core import ffd
 
 TILES = [3, 4, 5, 6, 7]
-MODES = ["gather", "tt", "ttli", "separable"]
-GRAD_IMPLS = ["xla", "jnp"]  # pallas adjoint: interpret-only on CPU hosts
+MODES = ["gather", "tt", "ttli", "separable", "matmul"]
+# pallas/matmul adjoint kernels: interpret-only on CPU hosts
+GRAD_IMPLS = ["xla", "jnp"]
 
 
 def run(full=False, volumes=("phantom2", "porcine1"), reps=3, tiles=None,
@@ -143,6 +144,9 @@ def run_fused(full=False, volumes=("phantom2",), reps=3, tiles=(5,),
     unfused dense-field → warp → similarity composition and the fused
     single-pass kernel — on the same volume and grid, so the ``_fused``
     row's derived column is a direct speedup over its ``_unfused`` sibling.
+    A third ``_fused_matmul`` row runs the megakernel with its displacement
+    stage in the MXU matrix form (``mode="matmul"`` → ``disp_form``), scored
+    against the same unfused baseline.
     """
     from benchmarks.common import peak_hbm_bytes
     from repro.core.similarity import resolve_similarity
@@ -153,7 +157,7 @@ def run_fused(full=False, volumes=("phantom2",), reps=3, tiles=(5,),
         tile = (t, t, t)
         for sim in similarities:
             _, sim_fn = resolve_similarity(sim)
-            total_un, total_fu = 0.0, 0.0
+            total_un, total_fu, total_mm = 0.0, 0.0, 0.0
             for name in volumes:
                 vol = vols[name]
                 phi = grid_for(vol, tile)
@@ -170,8 +174,14 @@ def run_fused(full=False, volumes=("phantom2",), reps=3, tiles=(5,),
                     return ffd.fused_warp_loss(p, mov, fix, tile,
                                                similarity=sim)
 
+                def fused_mm(p, tile=tile, sim=sim, mov=mov, fix=fix):
+                    return ffd.fused_warp_loss(p, mov, fix, tile,
+                                               similarity=sim, mode="matmul")
+
                 total_un += time_fn(jax.jit(jax.grad(unfused)), phi, reps=reps)
                 total_fu += time_fn(jax.jit(jax.grad(fused)), phi, reps=reps)
+                total_mm += time_fn(jax.jit(jax.grad(fused_mm)), phi,
+                                    reps=reps)
             hbm = peak_hbm_bytes()
             hbm_s = "n/a" if hbm is None else f"{hbm / 2**20:.1f}MiB"
             n = len(volumes)
@@ -181,6 +191,9 @@ def run_fused(full=False, volumes=("phantom2",), reps=3, tiles=(5,),
                          round(total_fu / n * 1e6, 1),
                          f"x{total_un / total_fu:.2f}-vs-unfused"
                          f"|peak_hbm={hbm_s}"))
+            rows.append((f"bsi_fused/tile{t}/{sim}_fused_matmul",
+                         round(total_mm / n * 1e6, 1),
+                         f"x{total_un / total_mm:.2f}-vs-unfused"))
     return rows
 
 

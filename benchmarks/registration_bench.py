@@ -2,8 +2,9 @@
 
 Registers synthetic phantom pairs (repro.data.volumes) with (a) affine only,
 (b) FFD using the baseline ``gather`` BSI, (c) FFD using the optimized
-``separable`` BSI, (d) FFD using the autotuned BSI (``repro.engine``
-picks the fastest form for this grid/tile), and (e) FFD with the fused
+``separable`` BSI, (d) FFD using the MXU matrix form (``matmul`` BSI),
+(e) FFD using the autotuned BSI (``repro.engine``
+picks the fastest form for this grid/tile), and (f) FFD with the fused
 level-step megakernel forced on (``fused="on"``: BSI + warp + similarity in
 one VMEM pass) — reporting total time, the BSI share (Amdahl argument of
 paper §6.2) and MAE/SSIM against the fixed volume (Table 5 analogue).  The
@@ -105,7 +106,7 @@ def run(shape=(48, 40, 36), iters=25, affine_iters=30, multimodal=True):
         aff = affine_register(fixed, moving, iters=affine_iters)
         res = {}
         for mode, impl in (("gather", "jnp"), ("separable", "jnp"),
-                           (auto_mode, auto_impl)):
+                           ("matmul", "jnp"), (auto_mode, auto_impl)):
             if (mode, impl) in res:
                 continue
             res[(mode, impl)] = ffd_register(
@@ -119,6 +120,7 @@ def run(shape=(48, 40, 36), iters=25, affine_iters=30, multimodal=True):
             tile=TILE, levels=2, iters=iters, fused="on"))
         base = res[("gather", "jnp")]
         opt = res[("separable", "jnp")]
+        mm = res[("matmul", "jnp")]
         auto = res[(auto_mode, auto_impl)]
         rows += [
             (f"registration/{name}/affine",
@@ -136,6 +138,12 @@ def run(shape=(48, 40, 36), iters=25, affine_iters=30, multimodal=True):
              f"|ssim={float(metrics.ssim(opt.warped, fixed)):.4f}"
              f"|bsi_s={opt.bsi_seconds:.3f}"
              f"|reg_speedup=x{base.seconds / max(opt.seconds, 1e-9):.2f}"),
+            (f"registration/{name}/ffd_matmul",
+             round(mm.seconds * 1e6, 0),
+             f"mae={float(metrics.mae(mm.warped, fixed)):.4f}"
+             f"|ssim={float(metrics.ssim(mm.warped, fixed)):.4f}"
+             f"|bsi_s={mm.bsi_seconds:.3f}"
+             f"|reg_speedup=x{base.seconds / max(mm.seconds, 1e-9):.2f}"),
             (f"registration/{name}/ffd_auto",
              round(auto.seconds * 1e6, 0),
              f"mae={float(metrics.mae(auto.warped, fixed)):.4f}"

@@ -1,4 +1,4 @@
-"""Quickstart: B-spline interpolation in all four algorithm forms.
+"""Quickstart: B-spline interpolation in all five algorithm forms.
 
 Shows the paper's core operation — expanding a coarse control grid into a
 dense deformation field — plus the generic-interpolation use from paper §8
@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ffd
-from repro.core.interpolate import interpolate
+from repro.core.interpolate import MODE_NAMES, interpolate
 from repro.kernels import ops
 from repro.kernels.ref import bsi_ref
 
@@ -45,7 +45,7 @@ def main():
 
     ref = bsi_ref(phi, tile)
     print(f"control grid {phi.shape} -> dense field {ref.shape}")
-    for mode in ("gather", "tt", "ttli", "separable"):
+    for mode in MODE_NAMES:
         fn = jax.jit(lambda p, m=mode: interpolate(p, tile, mode=m))
         out = fn(phi)
         jax.block_until_ready(out)

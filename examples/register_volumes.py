@@ -41,7 +41,8 @@ from repro.engine import ConvergenceConfig, register_batch, resolve_bsi
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="auto",
-                    choices=["auto", "gather", "tt", "ttli", "separable"])
+                    choices=["auto", "gather", "tt", "ttli", "separable",
+                             "matmul"])
     ap.add_argument("--shape", type=int, nargs=3, default=(64, 56, 48))
     ap.add_argument("--iters", type=int, default=30)
     ap.add_argument("--batch", type=int, default=0,

@@ -24,6 +24,7 @@ import numpy as np
 __all__ = [
     "bspline_basis",
     "weight_lut",
+    "basis_matrix",
     "lerp_luts",
     "grid_points_for_tiles",
 ]
@@ -60,6 +61,30 @@ def _weight_lut_np(delta: int, dtype_name: str) -> np.ndarray:
 def weight_lut(delta: int, dtype=jnp.float32):
     """``(delta, 4)`` aligned-grid weight LUT: ``W[a, l] = B_l(a / delta)``."""
     return jnp.asarray(_weight_lut_np(int(delta), jnp.dtype(dtype).name))
+
+
+@functools.lru_cache(maxsize=None)
+def _basis_matrix_np(tile: tuple, dtype_name: str) -> np.ndarray:
+    dx, dy, dz = tile
+    wx = _weight_lut_np(dx, "float64")
+    wy = _weight_lut_np(dy, "float64")
+    wz = _weight_lut_np(dz, "float64")
+    b = np.einsum("al,bm,cn->abclmn", wx, wy, wz)
+    return b.reshape(dx * dy * dz, 64).astype(dtype_name)
+
+
+def basis_matrix(tile, dtype=jnp.float32):
+    """``(dx*dy*dz, 64)`` matrix form of the 3-D aligned-grid basis.
+
+    ``B[v, k] = Wx[a, l] * Wy[b, m] * Wz[c, n]`` with voxel offset
+    ``v = (a*dy + b)*dz + c`` and control offset ``k = (l*4 + m)*4 + n`` —
+    the Kronecker product of the three per-axis ``(delta, 4)`` LUTs, so one
+    ``(tile^3, 64) @ (64, C)`` matmul per tile evaluates the whole cell
+    (Wu & Zou's matrix representation; the ``mode="matmul"`` hot path).
+    Rows sum to 1 (partition of unity per axis, three times).
+    """
+    tile = tuple(int(d) for d in tile)
+    return jnp.asarray(_basis_matrix_np(tile, jnp.dtype(dtype).name))
 
 
 @functools.lru_cache(maxsize=None)

@@ -92,8 +92,12 @@ def fused_warp_loss(phi, moving, fixed, tile, *, similarity="ssd",
     close.  ``similarity`` must have a fused accumulator
     (``core.similarity.fused_spec``); custom callables raise.
 
-    ``mode`` / ``impl`` / ``grad_impl`` configure only the backward's
-    recompute (the fused forward has one algorithm); ``compute_dtype``
+    ``impl`` / ``grad_impl`` configure only the backward's recompute;
+    ``mode`` also selects the fused forward's displacement stage —
+    ``mode="matmul"`` runs the megakernel's BSI contraction in the MXU
+    matrix form (``kernels.bsi_fused._disp_block(form="matmul")``), every
+    other mode runs the separable sweeps (the kernel's two contraction
+    forms; both produce the same displacement).  ``compute_dtype``
     quantises the displacement and the sampled intensities exactly as the
     unfused pair of knobs does, with fp32 partial-sum accumulation.
     """
@@ -124,11 +128,14 @@ def _fused_objective(tile, spec, mode, impl, grad_impl, cdtype, interpret):
         warped = warp_volume(mov, disp, compute_dtype=cdtype)
         return sim(warped.astype(jnp.float32), fix.astype(jnp.float32))
 
+    disp_form = "matmul" if mode == "matmul" else "separable"
+
     @jax.custom_vjp
     def fused(p, mov, fix):
         return ops.fused_similarity_loss(p, mov, fix, tile, sim_spec=spec,
                                          compute_dtype=cdtype,
-                                         interpret=interpret)
+                                         interpret=interpret,
+                                         disp_form=disp_form)
 
     def fwd(p, mov, fix):
         return fused(p, mov, fix), (p, mov, fix)

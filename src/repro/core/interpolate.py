@@ -20,6 +20,12 @@ Forms
 ``separable``   beyond-paper tensor-contraction form: the per-tile sum is a
                 Tucker contraction -> three small matmuls (MXU-friendly),
                 ~(4/d + 4/d^2 + 4/d^3) MACs/voxel instead of 64.
+``matmul``      Wu & Zou's matrix form: the per-axis ``(d, 4)`` LUTs are
+                Kronecker-multiplied once per (tile, dtype) into a
+                ``(d^3, 64)`` basis matrix and every tile is one dense
+                ``(d^3, 64) @ (64, C)`` product — a single MXU/TensorCore-
+                shaped contraction with fp32 accumulation over bf16-friendly
+                operands, instead of gathers and elementwise FMAs.
 
 Gradient path
 -------------
@@ -36,6 +42,10 @@ share one analytic adjoint: the Tucker contraction run in reverse
             own (4·tile)^3 support window — gather-only, three small matmuls.
 ``pallas``  the same contraction as a VMEM-tiled TPU kernel
             (``repro.kernels.bsi_adjoint``), thread-per-*control-point*.
+``matmul``  the transposed matrix form as a VMEM-tiled TPU kernel: one
+            ``(64, d^3) @ (d^3, tiles*C)`` MXU contraction per control block
+            followed by the 64-band shifted overlap-add (also in
+            ``repro.kernels.bsi_adjoint``).
 
 Because BSI is linear, the custom VJP stores **no residuals** — the backward
 needs only the cotangent, unlike XLA's transpose which re-materialises
@@ -48,11 +58,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.bspline import lerp_luts, weight_lut
+from repro.core.bspline import basis_matrix, lerp_luts, weight_lut
 
-__all__ = ["bsi_gather", "bsi_tt", "bsi_ttli", "bsi_separable",
-           "bsi_adjoint_separable", "bsi_adjoint", "interpolate",
-           "MODES", "GRAD_IMPLS"]
+__all__ = ["bsi_gather", "bsi_tt", "bsi_ttli", "bsi_separable", "bsi_matmul",
+           "bsi_adjoint_separable", "bsi_adjoint_matmul", "bsi_adjoint",
+           "interpolate", "MODES", "MODE_NAMES", "GRAD_IMPLS"]
 
 
 def _dims(phi, tile):
@@ -170,17 +180,49 @@ def bsi_separable(phi, tile, dtype=None):
     return hz.reshape(tx * dx, ty * dy, tz * dz, c)
 
 
+def bsi_matmul(phi, tile, dtype=None):
+    """Matrix form (Wu & Zou): one ``(d^3, 64) @ (64, C)`` matmul per tile.
+
+    The 64 shifted views of the control grid become the per-tile column
+    matrix; the precomputed Kronecker basis (:func:`~repro.core.bspline.
+    basis_matrix`) contracts them in a single MXU-shaped ``dot_general``
+    with fp32 accumulation (``preferred_element_type``) — bf16 operands
+    stay bf16 in memory, products accumulate in fp32.
+    """
+    dtype = dtype or phi.dtype
+    phi = jnp.asarray(phi, dtype)
+    (dx, dy, dz), (tx, ty, tz), c = _dims(phi, tile)
+    b = basis_matrix((dx, dy, dz), dtype)  # (d^3, 64)
+
+    win = jnp.stack([
+        phi[l : l + tx, m : m + ty, n : n + tz]
+        for l in range(4) for m in range(4) for n in range(4)
+    ], axis=3)  # (tx, ty, tz, 64, C)
+    h = jax.lax.dot_general(b, win, (((1,), (3,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = h.astype(dtype).reshape(dx, dy, dz, tx, ty, tz, c)
+    h = h.transpose(3, 0, 4, 1, 5, 2, 6)
+    return h.reshape(tx * dx, ty * dy, tz * dz, c)
+
+
 MODES = {
     "gather": bsi_gather,
     "tt": bsi_tt,
     "ttli": bsi_ttli,
     "separable": bsi_separable,
+    "matmul": bsi_matmul,
 }
 
+# The canonical mode-name set.  Every other layer that validates or
+# enumerates modes (options validation, the autotuner's candidate list,
+# benchmarks) derives from this tuple — do not restate the names elsewhere.
+MODE_NAMES = tuple(sorted(MODES))
+
 # Adjoint implementations for the custom-VJP gradient path: "xla" is plain
-# autodiff of the forward (no custom VJP), the others are the analytic
-# separable-transpose adjoint as jnp / as the Pallas kernel.
-GRAD_IMPLS = ("xla", "jnp", "pallas")
+# autodiff of the forward (no custom VJP), the others are analytic adjoints —
+# the separable transpose as jnp ("jnp") / as the Pallas kernel ("pallas"),
+# and the transposed-matmul Pallas kernel ("matmul").
+GRAD_IMPLS = ("xla", "jnp", "pallas", "matmul")
 
 
 def bsi_adjoint_separable(g, tile, dtype=None):
@@ -229,23 +271,54 @@ def bsi_adjoint_separable(g, tile, dtype=None):
                for l in range(4))
 
 
+def bsi_adjoint_matmul(g, tile, dtype=None):
+    """Transposed matrix form of :func:`bsi_matmul` (jnp reference).
+
+    ``c4[t, k] = sum_v B[v, k] * g[t, v]`` — one ``(64, d^3) @ (d^3, T*C)``
+    contraction per call — followed by the 64-band shifted overlap-add that
+    scatters tile ``t``'s offset-``(l, m, n)`` band onto control point
+    ``t + (l, m, n)``.  Same signature and semantics as
+    :func:`bsi_adjoint_separable`; a Pallas kernel of the same contraction
+    lives in ``repro.kernels.bsi_adjoint`` (``grad_impl="matmul"``).
+    """
+    dtype = dtype or jnp.promote_types(g.dtype, jnp.float32)
+    dx, dy, dz = (int(t) for t in tile)
+    X, Y, Z, c = g.shape
+    if X % dx or Y % dy or Z % dz:
+        raise ValueError(f"cotangent shape {g.shape} not a multiple of {tile}")
+    tx, ty, tz = X // dx, Y // dy, Z // dz
+    g = jnp.asarray(g, dtype)
+    b = basis_matrix((dx, dy, dz), dtype)  # (d^3, 64)
+
+    u = g.reshape(tx, dx, ty, dy, tz, dz, c).transpose(0, 2, 4, 1, 3, 5, 6)
+    u = u.reshape(tx, ty, tz, dx * dy * dz, c)
+    c4 = jax.lax.dot_general(b, u, (((0,), (3,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    c4 = c4.astype(dtype).reshape(4, 4, 4, tx, ty, tz, c)
+    return sum(
+        jnp.pad(c4[l, m, n], ((l, 3 - l), (m, 3 - m), (n, 3 - n), (0, 0)))
+        for l in range(4) for m in range(4) for n in range(4))
+
+
 @functools.partial(jax.jit, static_argnames=("tile", "impl", "dtype_name"))
 def _adjoint_jit(g, tile, impl, dtype_name):
     dtype = jnp.dtype(dtype_name) if dtype_name else None
     if impl == "jnp":
         return bsi_adjoint_separable(g, tile, dtype)
-    if impl == "pallas":
+    if impl in ("pallas", "matmul"):
         from repro.kernels import ops  # local import: kernels import this module
 
-        return ops.bsi_adjoint_pallas(g, tile, dtype=dtype)
+        form = "separable" if impl == "pallas" else "matmul"
+        return ops.bsi_adjoint_pallas(g, tile, dtype=dtype, form=form)
     raise ValueError(f"unknown adjoint impl {impl!r}")
 
 
 def bsi_adjoint(g, tile, *, impl="jnp", dtype=None):
     """Dispatch the analytic BSI adjoint (see :func:`bsi_adjoint_separable`).
 
-    ``impl``: ``jnp`` (reference separable-transpose) or ``pallas`` (the
-    VMEM-tiled kernel in ``repro.kernels.bsi_adjoint``).
+    ``impl``: ``jnp`` (reference separable-transpose), ``pallas`` (the
+    VMEM-tiled separable-transpose kernel in ``repro.kernels.bsi_adjoint``)
+    or ``matmul`` (the transposed-matmul kernel in the same module).
     """
     name = jnp.dtype(dtype).name if dtype is not None else None
     return _adjoint_jit(g, tuple(int(t) for t in tile), impl, name)
@@ -295,7 +368,8 @@ def interpolate(phi, tile, *, mode="separable", impl="jnp", dtype=None,
     Args:
       phi: ``(Tx+3, Ty+3, Tz+3, C)`` control grid (aligned, +1 offset).
       tile: ``(dx, dy, dz)`` control-point spacing in voxels.
-      mode: one of ``gather | tt | ttli | separable``.
+      mode: one of ``MODE_NAMES`` (``gather | matmul | separable | tt |
+        ttli``).
       impl: ``jnp`` (XLA-fused reference forms) or ``pallas`` (TPU kernels;
         runs under ``interpret=True`` on CPU).
       dtype: optional compute dtype (e.g. ``bfloat16``); the output takes
@@ -308,7 +382,7 @@ def interpolate(phi, tile, *, mode="separable", impl="jnp", dtype=None,
       ``(Tx*dx, Ty*dy, Tz*dz, C)`` dense field.
     """
     if mode not in MODES:
-        raise ValueError(f"unknown mode {mode!r}; choose from {sorted(MODES)}")
+        raise ValueError(f"unknown mode {mode!r}; choose from {MODE_NAMES}")
     if grad_impl not in GRAD_IMPLS:
         raise ValueError(
             f"unknown grad_impl {grad_impl!r}; choose from {GRAD_IMPLS}")

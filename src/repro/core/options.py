@@ -56,10 +56,28 @@ class _Unset:
 
 UNSET = _Unset()
 
-_BSI_MODES = ("auto", "gather", "tt", "ttli", "separable")
 _BSI_IMPLS = ("auto", "jnp", "pallas")
-_GRAD_IMPLS = ("auto", "xla", "jnp", "pallas")
 _FUSED = ("auto", "on", "off")
+
+
+def _bsi_modes():
+    """``("auto",)`` + the canonical mode set.
+
+    Derived lazily from ``repro.core.interpolate.MODE_NAMES`` — the single
+    source every layer validates against — so a new mode registers here
+    without a drifting duplicate list (this module keeps repro imports out
+    of module scope; see ``__post_init__``'s registry imports).
+    """
+    from repro.core.interpolate import MODE_NAMES
+
+    return ("auto",) + MODE_NAMES
+
+
+def _grad_impls():
+    """``("auto",)`` + ``repro.core.interpolate.GRAD_IMPLS`` (same rule)."""
+    from repro.core.interpolate import GRAD_IMPLS
+
+    return ("auto",) + GRAD_IMPLS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,7 +98,7 @@ class RegistrationOptions:
     mode, impl:      BSI algorithm form / kernel backend (``"auto"`` =
                      the ``engine.autotune`` winner).
     grad_impl:       BSI adjoint implementation (``"auto"`` | ``"xla"`` |
-                     ``"jnp"`` | ``"pallas"``).
+                     ``"jnp"`` | ``"pallas"`` | ``"matmul"``).
     compute_dtype:   reduced-precision dtype for BSI + warp (e.g.
                      ``"bfloat16"``), or None for fp32 throughout.
     similarity:      registered similarity name or a ``(warped, fixed) ->
@@ -139,13 +157,15 @@ class RegistrationOptions:
             if not v >= 0 or (name == "lr" and v == 0):
                 raise ValueError(f"{name} must be positive, got {v}")
             object.__setattr__(self, name, v)
-        if self.mode not in _BSI_MODES:
-            raise ValueError(f"mode must be one of {_BSI_MODES}, got {self.mode!r}")
+        modes = _bsi_modes()
+        if self.mode not in modes:
+            raise ValueError(f"mode must be one of {modes}, got {self.mode!r}")
         if self.impl not in _BSI_IMPLS:
             raise ValueError(f"impl must be one of {_BSI_IMPLS}, got {self.impl!r}")
-        if self.grad_impl not in _GRAD_IMPLS:
+        grad_impls = _grad_impls()
+        if self.grad_impl not in grad_impls:
             raise ValueError(
-                f"grad_impl must be one of {_GRAD_IMPLS}, got {self.grad_impl!r}"
+                f"grad_impl must be one of {grad_impls}, got {self.grad_impl!r}"
             )
         if self.fused in (True, False):  # ergonomic bool spelling
             object.__setattr__(self, "fused", "on" if self.fused else "off")

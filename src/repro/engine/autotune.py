@@ -51,7 +51,11 @@ PALLAS_CANDIDATES = tuple((m, "pallas") for m in PALLAS_MODES)
 # Disk-cache schema.  v2 added the fused level-step axis (BsiChoice.fused +
 # the "|fused|" race entries) and moved entries under the versioned wrapper;
 # v1 files (flat {key: choice} dicts) predate it and read as a clean miss.
-SCHEMA_VERSION = 2
+# v3 added the matmul mode + the "matmul" adjoint to the candidate space:
+# pre-matmul (v2) files pinned winners measured without the MXU form in the
+# race, so they re-benchmark as a clean miss rather than silently excluding
+# the new candidates.
+SCHEMA_VERSION = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,12 +96,14 @@ def default_grad_impls():
     """Adjoint implementations worth benchmarking on the current backend.
 
     ``xla`` (plain autodiff) and ``jnp`` (the analytic separable-transpose
-    custom VJP) everywhere; the Pallas adjoint kernel joins off-CPU (or with
-    ``REPRO_AUTOTUNE_PALLAS=1``), same reasoning as :func:`default_candidates`.
+    custom VJP) everywhere; the Pallas adjoint kernels — ``pallas`` (the
+    separable sweeps) and ``matmul`` (the transposed MXU contraction) —
+    join off-CPU (or with ``REPRO_AUTOTUNE_PALLAS=1``), same reasoning as
+    :func:`default_candidates`.
     """
     impls = ["xla", "jnp"]
     if jax.default_backend() != "cpu" or os.environ.get("REPRO_AUTOTUNE_PALLAS"):
-        impls.append("pallas")
+        impls += ["pallas", "matmul"]
     return tuple(impls)
 
 

@@ -18,6 +18,18 @@ run per control-point block:
   ``dot_general`` sweeps (MXU-friendly) + 4-band overlap-adds, accumulated
   in fp32 on-chip;
 * the control-grid gradient (the small array) is written exactly once.
+
+Two forms share that window/padding scheme (``ops.bsi_adjoint_pallas``
+dispatches via ``form=``):
+
+``separable``  the three per-axis sweep contraction above
+               (``grad_impl="pallas"``);
+``matmul``     the transposed matrix form (``grad_impl="matmul"``): the
+               window's per-tile ``d^3`` cotangents contract against the
+               ``(d^3, 64)`` Kronecker basis in one MXU-shaped
+               ``dot_general`` — ``c4[k, t] = sum_v B[v, k] * g[t, v]``,
+               the exact transpose of ``bsi_matmul``'s forward product —
+               followed by the same shifted overlap-adds.
 """
 from __future__ import annotations
 
@@ -29,7 +41,7 @@ from jax.experimental import pallas as pl
 
 from repro.kernels import common
 
-__all__ = ["bsi_adjoint_separable_pallas"]
+__all__ = ["bsi_adjoint_separable_pallas", "bsi_adjoint_matmul_pallas"]
 
 
 def _band_sum(c4, b):
@@ -125,3 +137,70 @@ def bsi_adjoint_separable_pallas(gp, wx, wy, wz, *, tile, block_ctrl,
         out_shape=out_shape,
         interpret=interpret,
     )(wx, wy, wz, gp)
+
+
+def _kernel_matmul(b_ref, g_ref, out_ref, *, tile, block_ctrl):
+    dx, dy, dz = tile
+    bx, by, bz = block_ctrl
+    c = out_ref.shape[-1]
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+    win = g_ref[
+        pl.ds(i * bx * dx, (bx + 3) * dx),
+        pl.ds(j * by * dy, (by + 3) * dy),
+        pl.ds(k * bz * dz, (bz + 3) * dz),
+        :,
+    ].astype(jnp.float32)  # fp32 on-chip accumulation for bf16 cotangents
+    b = b_ref[...].astype(jnp.float32)  # (dx*dy*dz, 64)
+
+    # per-tile layout: (tiles, d^3, C) — each padded tile's voxel cotangents
+    # as one column block of the transposed product
+    u = win.reshape(bx + 3, dx, by + 3, dy, bz + 3, dz, c)
+    u = u.transpose(0, 2, 4, 1, 3, 5, 6).reshape(-1, dx * dy * dz, c)
+    c4 = jax.lax.dot_general(
+        b, u, (((0,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (64, tiles, C): c4[k, t] = sum_v B[v, k] * g[t, v]
+    c4 = c4.reshape(4, 4, 4, bx + 3, by + 3, bz + 3, c)
+    # shifted overlap-adds, one axis at a time: band (l, m, n) of tile t
+    # lands on control point t + (l, m, n) - 3 (transpose of the forward's
+    # phi[t + (l, m, n)] reads; same geometry as _band_sum)
+    h = sum(c4[l, :, :, 3 - l : 3 - l + bx] for l in range(4))
+    h = sum(h[m, :, :, 3 - m : 3 - m + by] for m in range(4))
+    h = sum(h[n, :, :, 3 - n : 3 - n + bz] for n in range(4))
+    out_ref[...] = h.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "block_ctrl", "out_dtype", "interpret")
+)
+def bsi_adjoint_matmul_pallas(gp, b, *, tile, block_ctrl,
+                              out_dtype=jnp.float32, interpret=True):
+    """Transposed-matmul adjoint: same contract as the separable kernel.
+
+    Identical padding/window scheme and output as
+    :func:`bsi_adjoint_separable_pallas`, but the per-block reduction is one
+    ``(64, d^3) @ (d^3, tiles*C)`` MXU contraction against the Kronecker
+    basis ``b`` (``repro.core.bspline.basis_matrix``) instead of three
+    per-axis sweeps.
+    """
+    dx, dy, dz = tile
+    c = gp.shape[3]
+    nx, ny, nz = (s // d - 3 for s, d in zip(gp.shape[:3], tile))
+    bx, by, bz = block_ctrl
+    assert nx % bx == 0 and ny % by == 0 and nz % bz == 0, (gp.shape, block_ctrl)
+    grid = (nx // bx, ny // by, nz // bz)
+    out_shape = jax.ShapeDtypeStruct((nx, ny, nz, c), out_dtype)
+    return pl.pallas_call(
+        functools.partial(_kernel_matmul, tile=tile, block_ctrl=block_ctrl),
+        grid=grid,
+        in_specs=[
+            common.lut_spec(b.shape),
+            common.full_grid_spec(gp.shape),
+        ],
+        out_specs=pl.BlockSpec(
+            (bx, by, bz, c), lambda i, j, k: (i, j, k, 0)
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(b, gp)

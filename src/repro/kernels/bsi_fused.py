@@ -47,6 +47,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import common
+from repro.kernels.bsi_matmul import contract_window, kron_basis
 
 __all__ = ["bsi_fused_pallas", "fused_out_shape", "SCALAR_LANES"]
 
@@ -63,12 +64,16 @@ def fused_out_shape(sim):
     return (1, SCALAR_LANES)
 
 
-def _disp_block(phi_ref, wx, wy, wz, *, tile, block_tiles, extra):
-    """This cell's displacement block via the separable sweeps.
+def _disp_block(phi_ref, wx, wy, wz, *, tile, block_tiles, extra,
+                form="separable"):
+    """This cell's displacement block via the selected BSI contraction.
 
-    Identical contraction to ``bsi_separable._kernel`` but over the block
-    *extended* by ``extra`` tiles per axis (LNCC's window halo; zero
-    elsewhere).  Returns float32 ``((bx+ex)*dx, (by+ey)*dy, (bz+ez)*dz, C)``.
+    ``form="separable"`` runs the contraction of ``bsi_separable._kernel``;
+    ``form="matmul"`` runs ``bsi_matmul``'s single MXU contraction against
+    the Kronecker basis (built in-kernel from the same three LUT refs — tiny
+    at ``64 * d^3`` elements).  Either way the block is *extended* by
+    ``extra`` tiles per axis (LNCC's window halo; zero elsewhere).  Returns
+    float32 ``((bx+ex)*dx, (by+ey)*dy, (bz+ez)*dz, C)``.
     """
     dx, dy, dz = tile
     bx0, by0, bz0 = block_tiles
@@ -79,6 +84,9 @@ def _disp_block(phi_ref, wx, wy, wz, *, tile, block_tiles, extra):
     k = pl.program_id(2)
     win = phi_ref[pl.ds(i * bx0, bx + 3), pl.ds(j * by0, by + 3),
                   pl.ds(k * bz0, bz + 3), :]
+    if form == "matmul":
+        return contract_window(win, kron_basis(wx, wy, wz), tile,
+                               (bx, by, bz))
     px = jnp.stack([win[l: l + bx] for l in range(4)])
     h = jax.lax.dot_general(
         wx, px.reshape(4, -1), (((1,), (0,)), ((), ())),
@@ -150,7 +158,8 @@ def _scalar_row(*vals):
 
 
 def _fused_kernel(wx_ref, wy_ref, wz_ref, sc_ref, phi_ref, mov_ref, fix_ref,
-                  out_ref, *, tile, block_tiles, extra, vol_shape, sim):
+                  out_ref, *, tile, block_tiles, extra, vol_shape, sim,
+                  disp_form="separable"):
     X, Y, Z = vol_shape
     dx, dy, dz = tile
     first = ((pl.program_id(0) == 0) & (pl.program_id(1) == 0)
@@ -160,7 +169,8 @@ def _fused_kernel(wx_ref, wy_ref, wz_ref, sc_ref, phi_ref, mov_ref, fix_ref,
             pl.program_id(2) * (block_tiles[2] * dz))
 
     h = _disp_block(phi_ref, wx_ref[...], wy_ref[...], wz_ref[...],
-                    tile=tile, block_tiles=block_tiles, extra=extra)
+                    tile=tile, block_tiles=block_tiles, extra=extra,
+                    form=disp_form)
     # quantise to the compute dtype (what the unfused path stores to HBM),
     # then sample with fp32 coordinates exactly as warp_volume does
     disp = h.astype(phi_ref.dtype).astype(jnp.float32)
@@ -254,16 +264,19 @@ def _fused_kernel(wx_ref, wy_ref, wz_ref, sc_ref, phi_ref, mov_ref, fix_ref,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "tile", "block_tiles", "extra", "vol_shape", "sim", "interpret"))
+    "tile", "block_tiles", "extra", "vol_shape", "sim", "interpret",
+    "disp_form"))
 def bsi_fused_pallas(phi, mov, fix, wx, wy, wz, scalars, *, tile, block_tiles,
-                     extra, vol_shape, sim, interpret=True):
+                     extra, vol_shape, sim, interpret=True,
+                     disp_form="separable"):
     """Run the fused level-step kernel; returns the partial-sum block.
 
     ``phi``/``mov``/``fix`` arrive pre-padded to whole (extended) blocks from
     ``kernels.ops``; ``scalars`` is the ``(1, SCALAR_LANES)`` statistics row
     (zeros when ``sim`` needs none); ``sim`` is a similarity spec tuple
     (``("stats",) | ("ssd",) | ("ncc",) | ("lncc", size, eps) |
-    ("nmi", bins, sigma_ratio, eps)``).
+    ("nmi", bins, sigma_ratio, eps)``); ``disp_form`` picks the BSI
+    contraction of the displacement stage (see :func:`_disp_block`).
     """
     bx, by, bz = block_tiles
     ex, ey, ez = extra
@@ -277,7 +290,8 @@ def bsi_fused_pallas(phi, mov, fix, wx, wy, wz, scalars, *, tile, block_tiles,
     out_shape = fused_out_shape(sim)
     return pl.pallas_call(
         functools.partial(_fused_kernel, tile=tile, block_tiles=block_tiles,
-                          extra=extra, vol_shape=vol_shape, sim=sim),
+                          extra=extra, vol_shape=vol_shape, sim=sim,
+                          disp_form=disp_form),
         grid=grid,
         in_specs=[
             common.lut_spec(wx.shape),

@@ -13,9 +13,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.bspline import lerp_luts, weight_lut
-from repro.kernels.bsi_adjoint import bsi_adjoint_separable_pallas
+from repro.core.bspline import basis_matrix, lerp_luts, weight_lut
+from repro.kernels.bsi_adjoint import (bsi_adjoint_matmul_pallas,
+                                       bsi_adjoint_separable_pallas)
 from repro.kernels.bsi_fused import SCALAR_LANES, bsi_fused_pallas
+from repro.kernels.bsi_matmul import bsi_matmul_pallas
 from repro.kernels.bsi_separable import bsi_separable_pallas
 from repro.kernels.bsi_tt import bsi_tt_pallas
 from repro.kernels.bsi_ttli import bsi_ttli_pallas
@@ -26,7 +28,7 @@ __all__ = ["PALLAS_MODES", "FUSED_SIM_KINDS", "bsi_pallas",
 
 # Modes with a Pallas kernel (``gather`` has none — it is the baseline the
 # kernels beat).  The engine autotuner enumerates its candidates from this.
-PALLAS_MODES = ("tt", "ttli", "separable")
+PALLAS_MODES = ("tt", "ttli", "separable", "matmul")
 
 # Budget for (control grid + out block + window temporaries) in VMEM.
 _VMEM_BUDGET_BYTES = 12 * 2**20
@@ -85,8 +87,9 @@ def bsi_pallas(phi, tile, *, mode="ttli", dtype=None, block_tiles=None,
     """Run one of the BSI Pallas kernels on a stored control grid.
 
     Args match ``repro.core.interpolate.interpolate``; ``mode`` selects the
-    kernel (``tt`` | ``ttli`` | ``separable``; ``gather`` has no kernel — it
-    is the baseline the kernels beat).  ``interpret`` defaults to
+    kernel (``tt`` | ``ttli`` | ``separable`` | ``matmul``; ``gather`` has
+    no kernel — it is the baseline the kernels beat).  ``interpret``
+    defaults to
     :func:`default_interpret` — compiled on TPU, interpreter elsewhere.
     """
     if interpret is None:
@@ -126,6 +129,11 @@ def _bsi_pallas_jit(phi, tile, *, mode, dtype, block_tiles, interpret):
         out = bsi_separable_pallas(
             phi_p, *luts, tile=tile, block_tiles=block_tiles, interpret=interpret
         )
+    elif mode == "matmul":
+        b = basis_matrix(tile, phi.dtype)
+        out = bsi_matmul_pallas(
+            phi_p, b, tile=tile, block_tiles=block_tiles, interpret=interpret
+        )
     else:  # unreachable: PALLAS_MODES checked above; keep dispatch explicit
         raise ValueError(f"no Pallas kernel for mode {mode!r}")
     return out[
@@ -152,7 +160,7 @@ def pick_block_ctrl(num_ctrl, tile, channels, itemsize,
 
 
 def bsi_adjoint_pallas(g, tile, *, dtype=None, block_ctrl=None,
-                       interpret=None):
+                       interpret=None, form="separable"):
     """Run the Pallas BSI adjoint: dense cotangent -> control-grid cotangent.
 
     The transpose of :func:`bsi_pallas` (same answer for every forward mode —
@@ -160,7 +168,9 @@ def bsi_adjoint_pallas(g, tile, *, dtype=None, block_ctrl=None,
     ``(Tx*dx, Ty*dy, Tz*dz, C)`` cotangent of the dense field; returns the
     ``(Tx+3, Ty+3, Tz+3, C)`` control-grid cotangent in ``dtype`` (default
     float32 — fp32 accumulation even for bf16 cotangents).  ``interpret``
-    defaults to :func:`default_interpret`.
+    defaults to :func:`default_interpret`.  ``form`` picks the per-block
+    reduction: ``separable`` (three per-axis sweeps, ``grad_impl="pallas"``)
+    or ``matmul`` (one transposed MXU contraction, ``grad_impl="matmul"``).
 
     The dispatcher zero-pads ``g`` by 3 tiles per axis so every control
     point uniformly owns the padded-tile window ``[i, i+4)`` (the adjoint
@@ -171,13 +181,15 @@ def bsi_adjoint_pallas(g, tile, *, dtype=None, block_ctrl=None,
     if interpret is None:
         interpret = default_interpret()
     return _bsi_adjoint_jit(g, tuple(int(t) for t in tile), dtype=dtype,
-                            block_ctrl=block_ctrl, interpret=bool(interpret))
+                            block_ctrl=block_ctrl, interpret=bool(interpret),
+                            form=form)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("tile", "dtype", "block_ctrl", "interpret")
+    jax.jit, static_argnames=("tile", "dtype", "block_ctrl", "interpret", "form")
 )
-def _bsi_adjoint_jit(g, tile, *, dtype, block_ctrl, interpret):
+def _bsi_adjoint_jit(g, tile, *, dtype, block_ctrl, interpret,
+                     form="separable"):
     out_dtype = jnp.dtype(dtype) if dtype is not None else jnp.float32
     dx, dy, dz = tile
     X, Y, Z, c = g.shape
@@ -192,7 +204,15 @@ def _bsi_adjoint_jit(g, tile, *, dtype, block_ctrl, interpret):
     pads = [(3 * d, (3 + (-n) % b) * d)
             for n, b, d in zip(num_ctrl, block_ctrl, tile)]
     gp = jnp.pad(g, pads + [(0, 0)])
-    luts = tuple(weight_lut(d, jnp.float32) for d in tile)
+    if form == "matmul":
+        b = basis_matrix(tile, jnp.float32)
+        kern = functools.partial(bsi_adjoint_matmul_pallas, b=b)
+    elif form == "separable":
+        luts = tuple(weight_lut(d, jnp.float32) for d in tile)
+        kern = lambda slab, **kw: bsi_adjoint_separable_pallas(  # noqa: E731
+            slab, *luts, **kw)
+    else:
+        raise ValueError(f"unknown adjoint form {form!r}")
 
     nz_pad = gp.shape[2] // dz - 3  # padded control count along z
     # budget read at trace time (not def time) so tests can patch it
@@ -202,8 +222,8 @@ def _bsi_adjoint_jit(g, tile, *, dtype, block_ctrl, interpret):
     for k0 in range(0, nz_pad, chunk):
         k1 = min(k0 + chunk, nz_pad)
         slab = gp[:, :, k0 * dz : (k1 + 3) * dz]
-        outs.append(bsi_adjoint_separable_pallas(
-            slab, *luts, tile=tile, block_ctrl=block_ctrl,
+        outs.append(kern(
+            slab, tile=tile, block_ctrl=block_ctrl,
             out_dtype=out_dtype, interpret=interpret))
     out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
     return out[: num_ctrl[0], : num_ctrl[1], : num_ctrl[2]]
@@ -263,7 +283,7 @@ def pick_block_tiles_fused(num_tiles, tile, extra, sim_spec, itemsize,
 
 def fused_similarity_loss(phi, moving, fixed, tile, *, sim_spec,
                           compute_dtype=None, block_tiles=None,
-                          interpret=None):
+                          interpret=None, disp_form="separable"):
     """Similarity loss of the warped moving volume — fused, no dense field.
 
     Computes ``sim(warp(moving, bsi(phi)), fixed)`` where ``sim`` is the
@@ -274,6 +294,9 @@ def fused_similarity_loss(phi, moving, fixed, tile, *, sim_spec,
     VMEM tile-block and only the tiny reduction block reaches the host,
     where this dispatcher finishes the registry-exact scalar formula.
     Two-pass for NCC (mean of the warped volume) and NMI (its min/max).
+    ``disp_form`` picks the displacement stage's BSI contraction
+    (``separable`` sweeps or the ``matmul`` MXU form — see
+    ``kernels.bsi_fused._disp_block``).
 
     Forward only — the differentiable wrapper is
     ``repro.core.ffd.fused_warp_loss``.
@@ -283,13 +306,15 @@ def fused_similarity_loss(phi, moving, fixed, tile, *, sim_spec,
     cd = None if compute_dtype is None else jnp.dtype(compute_dtype).name
     return _fused_loss_jit(phi, moving, fixed, tuple(int(t) for t in tile),
                            sim_spec=tuple(sim_spec), compute_dtype=cd,
-                           block_tiles=block_tiles, interpret=bool(interpret))
+                           block_tiles=block_tiles, interpret=bool(interpret),
+                           disp_form=disp_form)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "tile", "sim_spec", "compute_dtype", "block_tiles", "interpret"))
+    "tile", "sim_spec", "compute_dtype", "block_tiles", "interpret",
+    "disp_form"))
 def _fused_loss_jit(phi, moving, fixed, tile, *, sim_spec, compute_dtype,
-                    block_tiles, interpret):
+                    block_tiles, interpret, disp_form="separable"):
     kind = sim_spec[0]
     if kind not in FUSED_SIM_KINDS:
         raise ValueError(f"no fused kernel for similarity spec {sim_spec!r}")
@@ -337,7 +362,7 @@ def _fused_loss_jit(phi, moving, fixed, tile, *, sim_spec, compute_dtype,
         return bsi_fused_pallas(phi, mov_p, fix_p, *luts, scalars, tile=tile,
                                 block_tiles=block_tiles, extra=extra,
                                 vol_shape=vol_shape, sim=sim,
-                                interpret=interpret)
+                                interpret=interpret, disp_form=disp_form)
 
     if kind == "ssd":
         acc = run(sim_spec, zeros)

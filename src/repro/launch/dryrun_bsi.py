@@ -32,16 +32,22 @@ from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import roofline_terms
 
-MODES = ("gather", "tt", "ttli", "separable")
+MODES = ("gather", "tt", "ttli", "separable", "matmul")
 
 
 def bsi_flops_model(volume, tile, mode, channels=3):
-    """Analytic per-voxel op model (paper App. B + DESIGN.md)."""
+    """Analytic per-voxel op model (paper App. B + DESIGN.md).
+
+    ``matmul`` is the dense (d^3, 64) basis contraction: 64 MACs per voxel
+    regardless of tile — more model FLOPs than separable, but they run on
+    the MXU at matrix-unit throughput instead of the VPU.
+    """
     nvox = volume[0] * volume[1] * volume[2]
     d = tile[0]
     per_voxel = {
         "gather": 255, "tt": 255, "ttli": 126,
         "separable": 2 * (4 + 16 / d + 64 / d / d),
+        "matmul": 2 * 64,
     }[mode]
     return nvox * per_voxel * channels
 

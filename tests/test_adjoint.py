@@ -122,7 +122,7 @@ def test_interpolate_rejects_unknown_grad_impl():
     phi = jnp.zeros((5, 5, 5, 3), jnp.float32)
     with pytest.raises(ValueError):
         interpolate(phi, (3, 3, 3), grad_impl="nosuch")
-    assert set(GRAD_IMPLS) == {"xla", "jnp", "pallas"}
+    assert set(GRAD_IMPLS) == {"xla", "jnp", "pallas", "matmul"}
 
 
 def test_custom_vjp_linear_no_residuals():

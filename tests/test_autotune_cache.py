@@ -55,6 +55,27 @@ def test_stale_schema_cache_is_a_miss_not_an_error(tmp_path):
     assert autotune._load_disk(str(cache)) == {}
 
 
+def test_pre_matmul_v2_cache_is_a_miss_and_upgrades(tmp_path):
+    """A v2 (pre-matmul) cache pinned winners measured without the MXU form
+    in the race: the v3 bump must read it as a clean miss, re-benchmark with
+    the enlarged candidate space and rewrite the file under v3."""
+    assert autotune.SCHEMA_VERSION == 3  # this test documents the v2 -> v3 bump
+    cache = tmp_path / "bsi_autotune.json"
+    stale_key = "cpu|g7x7x7|t2x2x2|c2|ttli/jnp,separable/jnp"
+    cache.write_text(json.dumps({
+        "__schema__": 2,
+        "entries": {stale_key: {"mode": "ttli", "impl": "jnp",
+                                "us_per_call": 1.0, "grad_impl": "xla",
+                                "fused": "off"}}}))
+    assert autotune._load_disk(str(cache)) == {}  # well-formed v2 != a hit
+    choice = _tune(cache)
+    assert choice.mode in {"ttli", "separable"} and choice.us_per_call > 0
+    data = json.loads(cache.read_text())
+    assert data["__schema__"] == 3  # the rewrite upgraded the schema
+    # the v2 entry did not survive into the rewritten file
+    assert all(v.get("us_per_call") != 1.0 for v in data["entries"].values())
+
+
 def test_malformed_entry_is_a_miss_not_an_error(tmp_path):
     cache = tmp_path / "bsi_autotune.json"
     first = _tune(cache)
@@ -98,8 +119,8 @@ def test_per_similarity_cache_keys_are_distinct(tmp_path):
 
 
 def test_fused_race_entry_round_trips(tmp_path, monkeypatch):
-    """autotune_fused caches its decision under the v2 schema and serves it
-    back without re-measuring (us_per_call would differ on a re-race)."""
+    """autotune_fused caches its decision under the current schema and serves
+    it back without re-measuring (us_per_call would differ on a re-race)."""
     # force the actual measurement on CPU hosts (same override that admits
     # interpret-mode Pallas into default_candidates)
     monkeypatch.setenv("REPRO_AUTOTUNE_PALLAS", "1")

@@ -112,7 +112,7 @@ def test_autotune_returns_valid_choice_and_caches(tmp_path):
     cache = tmp_path / "bsi_autotune.json"
     choice = autotune_bsi((8, 8, 8), (3, 3, 3), 3, reps=1,
                           cache_path=str(cache))
-    assert choice.mode in {"gather", "tt", "ttli", "separable"}
+    assert choice.mode in {"gather", "tt", "ttli", "separable", "matmul"}
     assert choice.impl in {"jnp", "pallas"}
     assert choice.us_per_call > 0
     assert cache.exists()
@@ -150,7 +150,7 @@ def test_resolve_bsi_passthrough_and_partial_auto(tmp_path):
                              channels=2, reps=1,
                              cache_path=str(tmp_path / "p.json"))
     assert impl == "pallas"
-    assert mode in {"tt", "ttli", "separable"}
+    assert mode in {"tt", "ttli", "separable", "matmul"}
     # no candidate matches an unknown mode
     with pytest.raises(ValueError):
         resolve_bsi("nosuch", "auto", (8, 8, 8), (3, 3, 3))

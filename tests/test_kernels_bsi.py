@@ -7,7 +7,7 @@ import pytest
 from repro.kernels import ops
 from repro.kernels.ref import bsi_ref
 
-KERNEL_MODES = ("tt", "ttli", "separable")
+KERNEL_MODES = ("tt", "ttli", "separable", "matmul")
 
 SHAPE_SWEEP = [
     # (grid points per axis, tile)

@@ -1,0 +1,189 @@
+"""Matrix-form BSI (mode="matmul"): parity with the other forms end to end.
+
+The matmul mode evaluates every tile as one (d^3, 64) @ (64, C) basis
+contraction (Wu & Zou's matrix representation) — ISSUE 9 acceptance: equal
+to the separable form to 1e-5 in value and gradient, in jnp and Pallas, in
+bf16 (fp32 accumulation), under vmap and on the 8-fake-device sharded job.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bspline import basis_matrix
+from repro.core.interpolate import (bsi_adjoint_matmul, bsi_adjoint_separable,
+                                    bsi_gather, bsi_matmul, bsi_separable,
+                                    interpolate)
+from repro.kernels import ops
+
+# (grid points per axis, tile) — mixed tiles, plus shapes whose tile counts
+# are NOT divisible by the kernels' default block picks (the pad-and-crop
+# path)
+SHAPE_SWEEP = [
+    ((7, 6, 5), (5, 4, 3)),
+    ((8, 8, 8), (5, 5, 5)),
+    ((10, 5, 9), (3, 5, 2)),     # non-divisible tile counts: 7, 2, 6
+    ((5, 13, 9), (4, 6, 5)),
+]
+
+
+def _phi(grid, c=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(grid + (c,)), jnp.float32)
+
+
+def test_basis_matrix_shape_and_partition_of_unity():
+    tile = (3, 4, 5)
+    b = basis_matrix(tile, jnp.float32)
+    assert b.shape == (3 * 4 * 5, 64)
+    # each voxel's 64 weights are a triple partition of unity
+    np.testing.assert_allclose(np.asarray(jnp.sum(b, axis=1)), 1.0,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("grid,tile", SHAPE_SWEEP)
+def test_matmul_matches_separable_jnp(grid, tile):
+    phi = _phi(grid, seed=hash((grid, tile)) % 2**31)
+    a = bsi_separable(phi, tile)
+    b = bsi_matmul(phi, tile)
+    assert b.shape == a.shape
+    np.testing.assert_allclose(np.asarray(b), np.asarray(a), atol=1e-5)
+
+
+@pytest.mark.parametrize("grid,tile", SHAPE_SWEEP)
+def test_matmul_pallas_matches_jnp(grid, tile):
+    phi = _phi(grid, seed=1)
+    ref = bsi_matmul(phi, tile)
+    out = ops.bsi_pallas(phi, tile, mode="matmul")
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_matmul_bf16_operands_fp32_accumulation():
+    """bf16 operands stay bf16 (output dtype) but partial sums accumulate in
+    fp32: the bf16 matmul result must sit within bf16 rounding of the fp32
+    answer, not drift with the 64-term reduction length."""
+    grid, tile = (8, 8, 8), (5, 5, 5)
+    phi = _phi(grid, seed=2)
+    ref = bsi_matmul(phi, tile)  # fp32
+    for impl, fn in (("jnp", lambda: bsi_matmul(phi, tile, jnp.bfloat16)),
+                     ("pallas", lambda: ops.bsi_pallas(
+                         phi, tile, mode="matmul", dtype=jnp.bfloat16))):
+        out = fn()
+        assert out.dtype == jnp.bfloat16, impl
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref), atol=5e-2)
+
+
+@pytest.mark.parametrize("grid,tile", SHAPE_SWEEP[:2])
+def test_matmul_grad_matches_gather_adjoint(grid, tile):
+    """Gradient parity vs autodiff of the gather baseline, for the jnp and
+    Pallas forwards under both the matmul custom-VJP adjoint and autodiff."""
+    phi = _phi(grid, seed=3)
+    shape = tuple((g - 3) * t for g, t in zip(grid, tile)) + (3,)
+    g = jnp.asarray(np.random.default_rng(4).standard_normal(shape),
+                    jnp.float32)
+    ref = jax.grad(lambda p: jnp.vdot(bsi_gather(p, tile), g))(phi)
+    cases = [
+        ("jnp/xla", dict(impl="jnp", grad_impl="xla")),
+        ("jnp/matmul", dict(impl="jnp", grad_impl="matmul")),
+        ("pallas/matmul", dict(impl="pallas", grad_impl="matmul")),
+        ("pallas/jnp", dict(impl="pallas", grad_impl="jnp")),
+    ]
+    for label, kw in cases:
+        got = jax.grad(lambda p: jnp.vdot(
+            interpolate(p, tile, mode="matmul", **kw), g))(phi)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-5, err_msg=label)
+
+
+def test_matmul_adjoint_forms_agree():
+    tile = (3, 4, 5)
+    g = jnp.asarray(np.random.default_rng(5).standard_normal((12, 20, 15, 3)),
+                    jnp.float32)
+    a = bsi_adjoint_separable(g, tile)
+    b = bsi_adjoint_matmul(g, tile)
+    p = ops.bsi_adjoint_pallas(g, tile, form="matmul")
+    np.testing.assert_allclose(np.asarray(b), np.asarray(a), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(a), atol=1e-5)
+
+
+def test_matmul_under_vmap():
+    grid, tile = (7, 6, 5), (5, 4, 3)
+    phis = jnp.stack([_phi(grid, seed=s) for s in range(3)])
+    ref = jax.vmap(lambda p: bsi_separable(p, tile))(phis)
+    out = jax.vmap(lambda p: interpolate(p, tile, mode="matmul",
+                                         grad_impl="matmul"))(phis)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    # ... and its gradient, batched
+    g = jnp.ones_like(ref)
+    gref = jax.vmap(lambda p, c: jax.grad(
+        lambda q: jnp.vdot(bsi_gather(q, tile), c))(p))(phis, g)
+    gout = jax.vmap(lambda p, c: jax.grad(lambda q: jnp.vdot(
+        interpolate(q, tile, mode="matmul", grad_impl="matmul"), c))(p))(
+            phis, g)
+    np.testing.assert_allclose(np.asarray(gout), np.asarray(gref), atol=1e-5)
+
+
+def test_matmul_mode_reaches_registration_options():
+    """mode="matmul" is a valid RegistrationOptions axis and registers a
+    pair end-to-end (the options/cache-key plumbing inherits the mode)."""
+    from repro.core.options import RegistrationOptions
+    from repro.core.registration import ffd_register
+    from repro.data.volumes import make_pair
+
+    f, m, _ = make_pair(shape=(18, 16, 14), tile=(5, 5, 5), magnitude=1.0,
+                        seed=0)
+    common = dict(tile=(5, 5, 5), levels=1, iters=3, fused="off")
+    res = ffd_register(f, m, options=RegistrationOptions(
+        mode="matmul", impl="jnp", grad_impl="matmul", **common))
+    base = ffd_register(f, m, options=RegistrationOptions(
+        mode="separable", impl="jnp", grad_impl="jnp", **common))
+    np.testing.assert_allclose(np.asarray(res.losses),
+                               np.asarray(base.losses), rtol=1e-4, atol=1e-6)
+
+
+def test_matmul_sharded_8dev_subprocess():
+    """The 8-fake-device sharded batch runs mode="matmul" and matches the
+    unsharded result (fresh process so the device count holds regardless of
+    the parent's backend)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.data.volumes import make_pair
+        from repro.engine import register_batch, make_registration_mesh
+        assert jax.device_count() == 8, jax.devices()
+        pairs = [make_pair(shape=(18, 16, 14), tile=(5, 5, 5),
+                           magnitude=1.2, seed=s) for s in range(3)]
+        F = jnp.stack([p[0] for p in pairs])
+        M = jnp.stack([p[1] for p in pairs])
+        kw = dict(tile=(5, 5, 5), levels=2, iters=4,
+                  mode="matmul", impl="jnp", grad_impl="matmul")
+        base = register_batch(F, M, **kw)
+        sep = register_batch(F, M, tile=(5, 5, 5), levels=2, iters=4,
+                             mode="separable", impl="jnp", grad_impl="jnp")
+        np.testing.assert_allclose(np.asarray(base.losses),
+                                   np.asarray(sep.losses),
+                                   rtol=1e-4, atol=1e-6)
+        mesh = make_registration_mesh()
+        res = register_batch(F, M, mesh=mesh, **kw)
+        np.testing.assert_allclose(np.asarray(res.warped),
+                                   np.asarray(base.warped), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(res.params),
+                                   np.asarray(base.params), atol=1e-4)
+        print("MATMUL_SHARD_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)  # the child pins its own before jax imports
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert "MATMUL_SHARD_OK" in r.stdout, r.stderr[-2000:]
