@@ -295,6 +295,62 @@ def run_earlystop(shape=(22, 20, 18), iters=24, batch=4, lr=0.1,
     return rows
 
 
+def run_optimizers(shape=(22, 20, 18), adam_iters=48, magnitude=2.5,
+                   seed=1, lr=0.1):
+    """Optimiser rows: second-order entries vs Adam on the hard pair.
+
+    One magnitude-``magnitude`` deformation pair, pure-SSD objective (the
+    regime where Adam's fixed per-coordinate step costs it the tail):
+    ``ffd_adam`` runs the full ``adam_iters`` budget; ``ffd_lbfgs`` and
+    ``ffd_gauss_newton`` get 25% of it, and their ``tol_met`` field
+    records whether they still reached Adam's final loss — the
+    steps-to-tolerance acceptance of the optimiser registry, with the
+    tolerance defined as what Adam achieves with 4x the steps.  Wall-clock
+    is a warm (compile-cached) median, so the rows gate cleanly in
+    ``compare.py``; mind that a second-order *step* is costlier than an
+    Adam step (line-search evals / CG solves), so ``speedup`` is the
+    honest wall-clock ratio, not the step ratio.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.engine import register_batch
+
+    f, m, _ = make_pair(shape=shape, tile=TILE, magnitude=magnitude,
+                        seed=seed)
+    F, M = jnp.stack([f]), jnp.stack([m])
+    base = dict(tile=TILE, levels=2, lr=lr, bending_weight=0.0,
+                mode="separable", impl="jnp")
+
+    def warm(options, reps=3):
+        register_batch(F, M, options=options)  # compile on miss
+        times, res = [], None
+        for _ in range(reps):
+            res = register_batch(F, M, options=options)
+            assert not res.compiled, "warm call must hit the program cache"
+            times.append(res.seconds)
+        return res, float(np.median(times))
+
+    adam_res, adam_s = warm(RegistrationOptions(**base, iters=adam_iters))
+    adam_loss = float(np.asarray(adam_res.losses)[0, -1])
+    rows = [("registration/optimizers/ffd_adam",
+             round(adam_s * 1e6, 0),
+             f"final_loss={adam_loss:.6f}|steps_per_level={adam_iters}")]
+    quarter = adam_iters // 4
+    for name in ("lbfgs", "gauss_newton"):
+        res, secs = warm(RegistrationOptions(**base, iters=quarter,
+                                             optimizer=name))
+        loss = float(np.asarray(res.losses)[0, -1])
+        rows.append((f"registration/optimizers/ffd_{name}",
+                     round(secs * 1e6, 0),
+                     f"final_loss={loss:.6f}"
+                     f"|steps_per_level={quarter}"
+                     f"|steps_vs_adam=25%"
+                     f"|tol_met={'yes' if loss <= adam_loss else 'NO'}"
+                     f"|speedup=x{adam_s / secs:.2f}"))
+    return rows
+
+
 def run_sharded(shape=(24, 20, 18), iters=6, batch=8, device_counts=None):
     """Pairs/sec vs device count: ``register_batch(..., mesh=...)`` scaling.
 
@@ -333,13 +389,16 @@ def run_sharded(shape=(24, 20, 18), iters=6, batch=8, device_counts=None):
     return rows
 
 
-def main(sharded=False, earlystop=False, transforms=False, **kwargs):
+def main(sharded=False, earlystop=False, transforms=False, optimizers=False,
+         **kwargs):
     if sharded:
         rows = run_sharded(**kwargs)
     elif earlystop:
         rows = run_earlystop(**kwargs)
     elif transforms:
         rows = run_transforms(**kwargs)
+    elif optimizers:
+        rows = run_optimizers(**kwargs)
     else:
         rows = run(**kwargs)
     return emit(rows, ["name", "us_per_call", "derived"])
@@ -360,6 +419,10 @@ if __name__ == "__main__":
     ap.add_argument("--transforms", action="store_true",
                     help="velocity-transform + analytic-bending rows incl. "
                          "the fold-case min-Jacobian comparison")
+    ap.add_argument("--optimizers", action="store_true",
+                    help="optimizer-registry rows: ffd_lbfgs / "
+                         "ffd_gauss_newton at 25% of ffd_adam's steps "
+                         "(steps-to-tolerance + wall-clock)")
     # None -> each path keeps its own defaults (run(): the paper-analogue
     # (48, 40, 36) x 25 iters; run_sharded(): a CPU-budget (24, 20, 18) x 6;
     # run_earlystop(): (22, 20, 18) x 24)
@@ -377,6 +440,8 @@ if __name__ == "__main__":
 
     if args.transforms:
         main(transforms=True, **kwargs)
+    elif args.optimizers:
+        main(optimizers=True, **kwargs)
     elif args.earlystop:
         main(earlystop=True,
              **({"batch": args.batch} if args.batch is not None else {}),

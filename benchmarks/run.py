@@ -73,6 +73,12 @@ def _suites(preset):
             # stop=ConvergenceConfig vs fixed iters (ISSUE 5 acceptance)
             ("registration_earlystop", lambda: registration_bench.main(
                 earlystop=True, shape=(22, 20, 18), iters=24, batch=4)),
+            # pluggable optimiser registry: second-order L-BFGS /
+            # Gauss-Newton at a quarter of Adam's step budget on the
+            # pure-SSD hard pair (ISSUE 10 acceptance: tol_met=yes means
+            # the quarter-budget run reached <= Adam's final loss)
+            ("registration_optimizers", lambda: registration_bench.main(
+                optimizers=True)),
             # continuous batching (engine.serve) vs sequential
             # register_batch under a Poisson stream: asserts >= 1.5x
             # pairs/sec at <= 2% loss excess (PR 6 acceptance), and its

@@ -125,6 +125,24 @@ class RegistrationOptions:
                      similarities and over-budget volumes fall back to
                      ``"off"``); ``"on"`` forces it (raising when
                      unsupported); ``"off"`` is the unfused pipeline.
+    optimizer:       registered optimiser name (``"adam"`` | ``"lbfgs"`` |
+                     ``"gauss_newton"``) or a frozen spec from
+                     ``repro.engine.optimizer`` (e.g. ``lbfgs(history=10)``);
+                     names normalise to their spec instance.  The default
+                     ``"adam"`` is bit-identical to the pre-registry engine;
+                     ``"gauss_newton"`` requires ``similarity="ssd"`` (the
+                     only built-in with a least-squares residual form) and
+                     an unfused level step (the fused megakernel's
+                     partial-sum accumulator never materialises the
+                     residual volume).
+    fused_reason:    why ``fused`` resolved the way it did — set by
+                     ``engine.autotune.resolve_options`` on its output
+                     (e.g. ``"forced on"``, ``"velocity transform has no
+                     fused composition"``, ``"autotune: fused won"``),
+                     ``None`` on hand-built unresolved options.  Excluded
+                     from equality/hash on purpose: it is introspection
+                     metadata, not configuration, so it never fragments a
+                     program cache.
     """
 
     tile: tuple = (5, 5, 5)
@@ -141,6 +159,8 @@ class RegistrationOptions:
     regularizer: Any = "none"
     stop: Any = None
     fused: str = "auto"
+    optimizer: Any = "adam"
+    fused_reason: Any = dataclasses.field(default=None, compare=False)
 
     def __post_init__(self):
         tile = tuple(int(t) for t in self.tile)
@@ -203,6 +223,32 @@ class RegistrationOptions:
                 "compositions the velocity transform needs; use fused='auto' "
                 "or 'off' (velocity always runs the unfused pipeline)"
             )
+        # Canonicalise the optimiser to its frozen spec instance (same
+        # discipline): "lbfgs" and lbfgs() hash equal, and the spec is the
+        # optimiser token in every downstream program-cache key.
+        from repro.engine.optimizer import (GaussNewtonOptimizer,
+                                            resolve_optimizer)
+
+        object.__setattr__(self, "optimizer", resolve_optimizer(self.optimizer))
+        if isinstance(self.optimizer, GaussNewtonOptimizer):
+            from repro.core.similarity import resolve_similarity
+
+            sim_key, _ = resolve_similarity(self.similarity)
+            if sim_key != "ssd":
+                raise ValueError(
+                    "optimizer='gauss_newton' needs the least-squares "
+                    "residual form only similarity='ssd' provides, got "
+                    f"similarity={self.similarity!r}; use optimizer='lbfgs' "
+                    "for non-least-squares similarities"
+                )
+            if self.fused == "on":
+                raise ValueError(
+                    "fused='on' is incompatible with optimizer="
+                    "'gauss_newton': the fused level step accumulates the "
+                    "similarity as in-VMEM partial sums and never "
+                    "materialises the residual volume Gauss-Newton "
+                    "linearises; use fused='auto' or 'off'"
+                )
         if self.stop is not None:
             from repro.engine.convergence import ConvergenceConfig
 

@@ -11,9 +11,11 @@ the algorithm forms / kernels can be plugged in (``mode=``, ``impl=``;
 both default to ``"auto"``, the ``repro.engine.autotune`` winner).
 
 The inner optimisation is device-resident: each pyramid level runs as ONE
-``jax.lax.scan``-compiled program (``repro.engine.loop``), with runners
+``jax.lax.scan``-compiled program (``repro.engine.loop``) under the
+pluggable ``optimizer=`` registry (``repro.engine.optimizer`` — Adam by
+default, L-BFGS / Gauss-Newton for second-order convergence), with runners
 cached per configuration so repeated calls pay zero re-jits, and the
-``(phi, m, v)`` buffers donated on accelerator backends.  For many pairs at
+params buffer donated on accelerator backends.  For many pairs at
 once, use ``repro.engine.register_batch`` — the same pipeline under ``vmap``.
 
 Hand-derived gradients (NiftyReg's approach) are replaced by autodiff; the
@@ -34,7 +36,7 @@ from repro.core.ffd import downsample2  # re-exported (seed API)
 from repro.core.options import (UNSET, RegistrationOptions,
                                 merge_legacy_options)
 from repro.engine.autotune import resolve_options
-from repro.engine.batch import ffd_level_loss
+from repro.engine.batch import ffd_level_objective
 from repro.engine.loop import make_adam_runner
 
 __all__ = ["RegistrationResult", "affine_register", "ffd_register", "downsample2"]
@@ -51,7 +53,7 @@ class RegistrationResult:
     losses: list             # loss trace
     seconds: float           # wall time
     bsi_seconds: float = 0.0 # time inside BSI (paper Figs. 8-9 breakdown)
-    steps: Any = None        # Adam steps per level when stop= was set
+    steps: Any = None        # optimiser steps per level when stop= was set
 
 
 def _affine_ident_centre(vol_shape):
@@ -79,23 +81,33 @@ def _affine_warp(theta, moving, vol_shape):
 @functools.lru_cache(maxsize=32)
 def _affine_runner(vol_shape, options):
     """One compiled affine loop per (shape, options) — ``options`` is a
-    canonical ``RegistrationOptions.for_affine()`` instance, the sole cache
-    key beyond the volume shape."""
+    canonical ``RegistrationOptions.for_affine()`` instance (which keeps the
+    ``optimizer`` axis), the sole cache key beyond the volume shape."""
     from repro.core.similarity import resolve_similarity
+    from repro.engine.optimizer import make_objective
 
-    _, sim = resolve_similarity(options.similarity)
+    sim_key, sim = resolve_similarity(options.similarity)
 
     def loss_builder(f, mov):
         def loss_fn(theta):
             return sim(_affine_warp(theta, mov, vol_shape), f)
 
-        return loss_fn
+        if sim_key != "ssd":
+            return loss_fn
+
+        # ssd exposes its least-squares residual (mean(r**2), no
+        # regulariser on the affine model) so optimizer="gauss_newton"
+        # can linearise the warp directly
+        def residual_fn(theta):
+            return (_affine_warp(theta, mov, vol_shape) - f).ravel()
+
+        return make_objective(loss_fn, residual_fn=residual_fn)
 
     return make_adam_runner(loss_builder, options=options)
 
 
 def affine_register(fixed, moving, *, options=None, iters=UNSET, lr=UNSET,
-                    similarity=UNSET, stop=UNSET):
+                    similarity=UNSET, stop=UNSET, optimizer=UNSET):
     """Optimise a 3x4 affine (around the volume centre) on ``similarity``.
 
     The whole optimisation is one scan-compiled program; the runner is
@@ -107,21 +119,24 @@ def affine_register(fixed, moving, *, options=None, iters=UNSET, lr=UNSET,
     is a registered name (``"ssd" | "ncc" | "lncc" | "nmi"``) or a loss
     callable (lower = better).  ``stop`` (a ``ConvergenceConfig``) runs the
     loop as an early-stopped ``lax.while_loop`` instead — the result's
-    ``steps`` records the Adam steps actually taken (``stop.max_iters``
-    defaults to ``iters``).
+    ``steps`` records the optimiser steps actually taken (``stop.max_iters``
+    defaults to ``iters``).  ``optimizer`` (``"adam" | "lbfgs" |
+    "gauss_newton"`` or an ``engine.optimizer`` spec) picks the loop —
+    ``"gauss_newton"`` needs ``similarity="ssd"`` and linearises the affine
+    warp directly.
     """
     fixed = jnp.asarray(fixed, jnp.float32)
     moving = jnp.asarray(moving, jnp.float32)
     opts = merge_legacy_options(
         "affine_register", options,
-        dict(iters=iters, lr=lr, similarity=similarity, stop=stop),
+        dict(iters=iters, lr=lr, similarity=similarity, stop=stop,
+             optimizer=optimizer),
         defaults=AFFINE_DEFAULTS).for_affine()
     stop = opts.stop  # resolved by for_affine()'s normalized()
     t0 = time.perf_counter()
     runner = _affine_runner(fixed.shape, opts)
     theta0 = jnp.zeros((3, 4), jnp.float32)
-    out = runner(theta0, jnp.zeros_like(theta0), jnp.zeros_like(theta0),
-                 fixed, moving)
+    out = runner(theta0, fixed, moving)
     theta, trace = out[:2]
     steps = [int(out[2])] if stop is not None else None
     # same sampling points as the seed's Python loop: every 10th + last
@@ -142,15 +157,15 @@ def _ffd_level_runner(vol_shape, options):
     del vol_shape  # cache key only; shapes re-trace via jit
 
     def loss_builder(f, mov):
-        return ffd_level_loss(f, mov, tile=options.tile,
-                              bending_weight=options.bending_weight,
-                              mode=options.mode, impl=options.impl,
-                              grad_impl=options.grad_impl,
-                              compute_dtype=options.compute_dtype,
-                              similarity=options.similarity,
-                              transform=options.transform,
-                              regularizer=options.regularizer,
-                              fused=options.fused)
+        return ffd_level_objective(f, mov, tile=options.tile,
+                                   bending_weight=options.bending_weight,
+                                   mode=options.mode, impl=options.impl,
+                                   grad_impl=options.grad_impl,
+                                   compute_dtype=options.compute_dtype,
+                                   similarity=options.similarity,
+                                   transform=options.transform,
+                                   regularizer=options.regularizer,
+                                   fused=options.fused)
 
     return make_adam_runner(loss_builder, options=options)
 
@@ -173,13 +188,14 @@ def ffd_register(
     transform=UNSET,
     regularizer=UNSET,
     stop=UNSET,
+    optimizer=UNSET,
     measure_bsi_time=False,
 ):
     """Multi-resolution FFD registration (NiftyReg workflow, paper §6).
 
     Pyramid: coarse-to-fine on 2x-downsampled volumes; the control grid is
     upsampled (re-expanded through BSI itself) between levels.  Each level's
-    Adam loop is a single ``lax.scan`` program — one compile per pyramid
+    optimiser loop is a single ``lax.scan`` program — one compile per pyramid
     level, cached across calls, keyed by the resolved
     ``RegistrationOptions``.  Configure via ``options=`` (a
     ``repro.core.RegistrationOptions``); the legacy keyword arguments still
@@ -204,8 +220,13 @@ def ffd_register(
     ``ConvergenceConfig``, see
     ``repro.engine.convergence``) replaces each level's fixed-``iters`` scan
     with an early-stopped ``lax.while_loop`` (``stop.max_iters`` defaults to
-    ``iters``); the result's ``steps`` then lists the Adam steps each level
-    actually ran.
+    ``iters``); the result's ``steps`` then lists the optimiser steps each
+    level actually ran.  ``optimizer`` (``"adam" | "lbfgs" | "gauss_newton"``
+    or an ``engine.optimizer`` spec, see the README's Optimisers table)
+    picks each level's optimisation loop — the default ``"adam"`` is
+    bit-identical to the historical engine; the second-order entries
+    typically converge hard pairs in a fraction of the steps
+    (``"gauss_newton"`` requires ``similarity="ssd"``).
     """
     fixed = jnp.asarray(fixed, jnp.float32)
     moving = jnp.asarray(moving, jnp.float32)
@@ -215,7 +236,7 @@ def ffd_register(
              bending_weight=bending_weight, mode=mode, impl=impl,
              grad_impl=grad_impl, compute_dtype=compute_dtype,
              similarity=similarity, transform=transform,
-             regularizer=regularizer, stop=stop))
+             regularizer=regularizer, stop=stop, optimizer=optimizer))
     opts = resolve_options(opts, fixed.shape)  # autotune + canonicalise
     tile, stop = opts.tile, opts.stop
 
@@ -241,7 +262,7 @@ def ffd_register(
             phi = ffd.upsample_grid(phi, gshape)
 
         runner = _ffd_level_runner(f.shape, opts)
-        out = runner(phi, jnp.zeros_like(phi), jnp.zeros_like(phi), f, m)
+        out = runner(phi, f, m)
         phi, trace = out[:2]
         if stop is not None:
             steps.append(int(out[2]))

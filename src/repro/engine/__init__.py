@@ -1,7 +1,9 @@
 """Batched, device-resident registration engine.
 
 The workload-scale layer over ``repro.core``: scan-compiled optimisation
-loops (``engine.loop``), whole-pipeline batching via ``vmap`` so N volume
+loops (``engine.loop``) over a pluggable ``optimizer=`` registry — Adam by
+default, second-order L-BFGS and Gauss-Newton entries for hard pairs
+(``engine.optimizer``) — whole-pipeline batching via ``vmap`` so N volume
 pairs register in one jitted program (``engine.batch.register_batch``), a
 benchmark-and-cache autotuner that picks the fastest BSI form per
 configuration instead of hardcoded defaults (``engine.autotune``),
@@ -17,8 +19,14 @@ from repro.engine.autotune import (BsiChoice, autotune_bsi,
                                    resolve_bsi, resolve_options)
 from repro.engine.batch import (BatchRegistrationResult, ffd_pipeline,
                                 register_batch)
-from repro.engine.convergence import ConvergenceConfig, adam_until
-from repro.engine.loop import adam_scan, make_adam_runner
+from repro.engine.convergence import (ConvergenceConfig, adam_until,
+                                      optimize_until)
+from repro.engine.loop import adam_scan, make_adam_runner, optimize_scan
+from repro.engine.optimizer import (OPTIMIZERS, AdamOptimizer,
+                                    GaussNewtonOptimizer, LbfgsOptimizer,
+                                    Objective, adam, available_optimizers,
+                                    gauss_newton, lbfgs, make_objective,
+                                    optimizer_token, resolve_optimizer)
 from repro.engine.serve import (AsyncRegistrationService, QueueFull,
                                 RegistrationScheduler, RegistrationTimeout,
                                 ServeResult, ServeStats)
@@ -36,8 +44,22 @@ __all__ = [
     "register_batch",
     "ConvergenceConfig",
     "adam_until",
+    "optimize_until",
     "adam_scan",
     "make_adam_runner",
+    "optimize_scan",
+    "OPTIMIZERS",
+    "AdamOptimizer",
+    "GaussNewtonOptimizer",
+    "LbfgsOptimizer",
+    "Objective",
+    "adam",
+    "available_optimizers",
+    "gauss_newton",
+    "lbfgs",
+    "make_objective",
+    "optimizer_token",
+    "resolve_optimizer",
     "AsyncRegistrationService",
     "QueueFull",
     "RegistrationScheduler",

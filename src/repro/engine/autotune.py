@@ -163,7 +163,7 @@ def _store_disk(path, key, choice) -> None:
 def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
                  cache_path=None, use_cache=True, measure_grad=False,
                  similarity=None, grad_impls=None, compute_dtype=None,
-                 transform=None, stop=None) -> BsiChoice:
+                 transform=None, stop=None, optimizer=None) -> BsiChoice:
     """Benchmark the candidate BSI forms and return (and cache) the winner.
 
     Args:
@@ -208,6 +208,15 @@ def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
         length would make the measurement (and its cache entry) depend on
         the synthetic pair's convergence.  Engine callers resolve ``stop``
         outside the tuner; passing it here is a usage error.
+      optimizer: optional optimiser name/spec (``repro.engine.optimizer``).
+        The timed workload stays the one forward+backward BSI step — it is
+        the per-step kernel work every registered optimiser shares (L-BFGS's
+        two-loop and Gauss-Newton's CG ride on the same expansion/adjoint
+        kernels) — but the cache entry gains an ``|opt=...`` token for
+        non-default optimisers, so a second-order run never silently reuses
+        (or overwrites) a winner recorded under a different step
+        composition.  The default Adam adds no token: pre-registry disk
+        cache entries stay valid without a ``SCHEMA_VERSION`` bump.
     """
     if stop is not None:
         raise ValueError(
@@ -220,6 +229,12 @@ def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
                      if compute_dtype is not None else None)
     tspec = resolve_transform(transform) if transform is not None else None
     velocity = isinstance(tspec, VelocityTransform)
+    opt_token = None
+    if optimizer is not None:
+        from repro.engine.optimizer import optimizer_token
+
+        tok = optimizer_token(optimizer)
+        opt_token = None if tok == "adam" else tok
     cands = (default_candidates() if candidates is None
              else tuple(candidates))
     gis = ("xla",) if grad_impls is None else tuple(grad_impls)
@@ -237,6 +252,7 @@ def autotune_bsi(grid_shape, tile, channels=3, *, candidates=None, reps=3,
               else f"|sim={similarity_token(similarity)}")
            + ("" if compute_dtype is None else f"|cd={compute_dtype}")
            + (f"|tf={transform_token(tspec)}" if velocity else "")
+           + ("" if opt_token is None else f"|opt={opt_token}")
            + "|" + ",".join("/".join(c) for c in cands))
     cache_path = default_cache_path() if cache_path is None else cache_path
     mem_key = (cache_path, key)
@@ -502,6 +518,11 @@ def resolve_options(options, vol_shape):
     ``RegistrationOptions`` instance IS the autotune cache key, the same
     object the compiled-runner caches and the serving buckets key on, so one
     validated configuration maps to one tuning decision everywhere.
+
+    Every path records *why* ``fused`` resolved the way it did on the
+    returned options' ``fused_reason`` field (introspection only — the
+    field is excluded from equality/hash, so it never fragments the
+    program caches keyed on the options instance).
     """
     from repro.core import ffd
     from repro.core.options import RegistrationOptions
@@ -520,29 +541,66 @@ def resolve_options(options, vol_shape):
         measure_grad=True,  # the loop's workload is forward+backward BSI
         similarity=opts.similarity,  # ... its backward mix is per-similarity
         compute_dtype=opts.compute_dtype,  # ... measured/cached per dtype
-        transform=opts.transform)  # ... velocity integrates before the warp
+        transform=opts.transform,  # ... velocity integrates before the warp
+        optimizer=opts.optimizer)  # ... non-default optimisers key apart
     opts = opts.replace(mode=mode, impl=impl, grad_impl=grad_impl)
     is_velocity = isinstance(opts.transform, VelocityTransform)
-    if opts.fused == "on":
+    from repro.engine.optimizer import GaussNewtonOptimizer
+
+    is_gn = isinstance(opts.optimizer, GaussNewtonOptimizer)
+    if opts.fused == "off":
+        opts = opts.replace(fused_reason="forced off")
+    elif opts.fused == "on":
         if is_velocity:  # unreachable via RegistrationOptions (which raises
             # at construction), but resolve_options is also a public face
             raise ValueError(
                 "fused='on' is incompatible with transform='velocity': the "
                 "fused level step cannot interleave scaling-and-squaring "
                 "compositions; use fused='auto' or 'off'")
+        if is_gn:  # same: RegistrationOptions raises at construction
+            raise ValueError(
+                "fused='on' is incompatible with optimizer='gauss_newton': "
+                "the fused level step never materialises the residual "
+                "volume Gauss-Newton linearises; use fused='auto' or 'off'")
         ok, why = kops.fused_supported(vol_shape, fused_spec(opts.similarity))
         if not ok:
             raise ValueError(
                 f"fused='on' cannot run for this configuration: {why}; "
                 "use fused='auto' (or 'off') to fall back to the unfused "
                 "level step")
-    elif opts.fused == "auto":
+        opts = opts.replace(fused_reason="forced on")
+    else:  # fused == "auto"
         if is_velocity:  # no race: the fused step has no velocity path yet
-            opts = opts.replace(fused="off")
+            opts = opts.replace(
+                fused="off",
+                fused_reason="velocity transform: the fused level step has "
+                             "no scaling-and-squaring composition")
+        elif is_gn:  # no race: Gauss-Newton linearises the unfused residual
+            opts = opts.replace(
+                fused="off",
+                fused_reason="gauss_newton optimiser: the fused level step "
+                             "never materialises the residual volume")
         else:
-            choice = autotune_fused(
-                grid_shape, opts.tile, vol_shape,
-                base=BsiChoice(mode, impl, 0.0, grad_impl),
-                similarity=opts.similarity, compute_dtype=opts.compute_dtype)
-            opts = opts.replace(fused=choice.fused)
+            ok, why = kops.fused_supported(vol_shape,
+                                           fused_spec(opts.similarity))
+            if not ok:
+                opts = opts.replace(fused="off",
+                                    fused_reason=f"unsupported: {why}")
+            elif (kops.default_interpret()
+                  and not os.environ.get("REPRO_AUTOTUNE_PALLAS")):
+                opts = opts.replace(
+                    fused="off",
+                    fused_reason="interpret-only Pallas backend (set "
+                                 "REPRO_AUTOTUNE_PALLAS=1 to race anyway)")
+            else:
+                choice = autotune_fused(
+                    grid_shape, opts.tile, vol_shape,
+                    base=BsiChoice(mode, impl, 0.0, grad_impl),
+                    similarity=opts.similarity,
+                    compute_dtype=opts.compute_dtype)
+                opts = opts.replace(
+                    fused=choice.fused,
+                    fused_reason="autotune: fused level step "
+                                 + ("won" if choice.fused == "on"
+                                    else "lost") + " the race")
     return opts

@@ -32,12 +32,15 @@ from repro.core.regularizer import regularizer_term
 from repro.core.similarity import resolve_similarity
 from repro.core.transform import (VelocityTransform, dense_displacement,
                                   resolve_transform)
-from repro.engine.convergence import adam_until, level_live, plateau_step
-from repro.engine.loop import adam_scan
+from repro.engine.convergence import (level_live, optimize_plateau_step,
+                                      optimize_until)
+from repro.engine.loop import optimize_scan
+from repro.engine.optimizer import init_state, make_objective
 
-__all__ = ["BatchRegistrationResult", "ffd_level_loss", "ffd_pipeline",
-           "register_batch", "level_vol_shapes", "compile_level_chunk",
-           "compile_level_init", "compile_level_splice", "compile_finish"]
+__all__ = ["BatchRegistrationResult", "ffd_level_loss", "ffd_level_objective",
+           "ffd_pipeline", "register_batch", "level_vol_shapes",
+           "compile_level_chunk", "compile_level_init",
+           "compile_level_splice", "compile_finish"]
 
 
 @dataclasses.dataclass
@@ -124,20 +127,77 @@ def ffd_level_loss(f, mov, *, tile, bending_weight, mode, impl,
     return loss_fn
 
 
+def ffd_level_objective(f, mov, *, tile, bending_weight, mode, impl,
+                        grad_impl="xla", compute_dtype=None, similarity="ssd",
+                        transform="displacement", regularizer="none",
+                        fused="off"):
+    """The :func:`ffd_level_loss` objective as an ``engine.optimizer.Objective``.
+
+    The scalar loss (and its ``value_and_grad``) is :func:`ffd_level_loss`
+    verbatim — the first-order path through this wrapper is bit-identical
+    to calling the loss directly.  When the similarity is the canonical
+    ``"ssd"`` (``mean((warped - fixed)**2)``) and the level is unfused, the
+    objective additionally exposes the least-squares *residual* form
+    ``r(p) = (warped - fixed).ravel()`` plus the standalone regulariser
+    term — what ``optimizer="gauss_newton"`` linearises for its matrix-free
+    ``J^T J`` products (on the XLA-differentiable BSI graph: forward-mode
+    ``jax.linearize`` cannot enter the analytic custom-VJP adjoint, which
+    stays on the gradient path only).  Any other similarity (including callables and the fused
+    megakernel, whose partial-sum accumulator never materialises the
+    residual volume) yields a scalar-only objective, which the Gauss-Newton
+    step rejects with a clear error.
+    """
+    loss_fn = ffd_level_loss(
+        f, mov, tile=tile, bending_weight=bending_weight, mode=mode,
+        impl=impl, grad_impl=grad_impl, compute_dtype=compute_dtype,
+        similarity=similarity, transform=transform, regularizer=regularizer,
+        fused=fused)
+    key, _ = resolve_similarity(similarity)
+    if key != "ssd" or fused in ("on", True):
+        return make_objective(loss_fn)
+
+    vol_shape = f.shape
+    tspec = resolve_transform(transform)
+    gshape = ffd.grid_shape_for_volume(vol_shape, tile)
+    reg = regularizer_term(regularizer, grid_shape=gshape, tile=tile,
+                           bending_weight=bending_weight)
+    fixed32 = f.astype(jnp.float32)
+
+    def residual_fn(p):
+        # grad_impl is pinned to "xla" here: Gauss-Newton linearises the
+        # residual with jax.linearize (forward mode), and the analytic
+        # adjoint is a custom_vjp with no JVP rule.  The forward values are
+        # identical either way — grad_impl only swaps the backward graph —
+        # so the gradient path (obj.vg, above) keeps the configured adjoint.
+        disp = dense_displacement(tspec, p, tile, vol_shape, mode=mode,
+                                  impl=impl, grad_impl="xla",
+                                  compute_dtype=compute_dtype)
+        warped = ffd.warp_volume(mov, disp, compute_dtype=compute_dtype)
+        return (warped.astype(jnp.float32) - fixed32).ravel()
+
+    return make_objective(loss_fn, residual_fn=residual_fn, reg_fn=reg)
+
+
 def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
                  mode, impl, grad_impl="xla", compute_dtype=None,
                  similarity="ssd", transform="displacement",
-                 regularizer="none", stop=None, fused="off"):
+                 regularizer="none", stop=None, fused="off",
+                 optimizer="adam"):
     """Pure multi-level FFD registration of ONE ``(fixed, moving)`` pair.
 
     Traceable end-to-end (no timing, no host sync): the levels unroll into
-    the trace and each level's inner loop is a ``lax.scan`` — or, with a
-    resolved ``ConvergenceConfig`` as ``stop``, the early-stopped
-    ``lax.while_loop`` (``engine.convergence.adam_until``), under which
-    ``vmap``ped lanes freeze as they converge and the level exits when the
-    last lane is done.  Returns ``(warped, phi, level_losses)``; with
-    ``stop`` set, ``(warped, phi, level_losses, level_steps)`` where
-    ``level_steps[l]`` is the Adam steps level ``l`` actually ran.
+    the trace and each level's inner loop is a ``lax.scan``
+    (``engine.loop.optimize_scan``) — or, with a resolved
+    ``ConvergenceConfig`` as ``stop``, the early-stopped ``lax.while_loop``
+    (``engine.convergence.optimize_until``), under which ``vmap``ped lanes
+    freeze as they converge and the level exits when the last lane is done.
+    ``optimizer`` is a registered name or spec (``engine.optimizer``;
+    default ``"adam"``, bit-identical to the pre-registry pipeline) — the
+    optimiser state restarts fresh at each level (the grid changes shape
+    between levels, so curvature history cannot carry across).  Returns
+    ``(warped, phi, level_losses)``; with ``stop`` set, ``(warped, phi,
+    level_losses, level_steps)`` where ``level_steps[l]`` is the optimiser
+    steps level ``l`` actually ran.
     """
     pyramid = [(fixed, moving)]
     for _ in range(levels - 1):
@@ -152,16 +212,18 @@ def ffd_pipeline(fixed, moving, *, tile, levels, iters, lr, bending_weight,
         gshape = ffd.grid_shape_for_volume(f.shape, tile)
         phi = (jnp.zeros(gshape + (3,), jnp.float32) if phi is None
                else ffd.upsample_grid(phi, gshape))
-        loss_fn = ffd_level_loss(f, m, tile=tile,
-                                 bending_weight=bending_weight,
-                                 mode=mode, impl=impl, grad_impl=grad_impl,
-                                 compute_dtype=compute_dtype,
-                                 similarity=similarity, transform=transform,
-                                 regularizer=regularizer, fused=fused)
+        obj = ffd_level_objective(f, m, tile=tile,
+                                  bending_weight=bending_weight,
+                                  mode=mode, impl=impl, grad_impl=grad_impl,
+                                  compute_dtype=compute_dtype,
+                                  similarity=similarity, transform=transform,
+                                  regularizer=regularizer, fused=fused)
         if stop is None:
-            phi, trace = adam_scan(loss_fn, phi, iters=iters, lr=lr)
+            phi, trace = optimize_scan(obj, phi, optimizer=optimizer,
+                                       iters=iters, lr=lr)
         else:
-            phi, trace, taken = adam_until(loss_fn, phi, stop=stop, lr=lr)
+            phi, trace, taken = optimize_until(obj, phi, optimizer=optimizer,
+                                               stop=stop, lr=lr)
             steps.append(taken)
         finals.append(trace[-1])
 
@@ -195,7 +257,8 @@ def _compiled_batch(vol_shape, options, mesh=None):
                                      compute_dtype=o.compute_dtype,
                                      transform=o.transform,
                                      regularizer=o.regularizer,
-                                     stop=o.stop, fused=o.fused)
+                                     stop=o.stop, fused=o.fused,
+                                     optimizer=o.optimizer)
 
     def single(f, m):
         return ffd_pipeline(f, m, tile=o.tile, levels=o.levels,
@@ -205,7 +268,7 @@ def _compiled_batch(vol_shape, options, mesh=None):
                             compute_dtype=o.compute_dtype,
                             similarity=o.similarity, transform=o.transform,
                             regularizer=o.regularizer, stop=o.stop,
-                            fused=o.fused)
+                            fused=o.fused, optimizer=o.optimizer)
 
     return jax.jit(jax.vmap(single))
 
@@ -214,7 +277,7 @@ def register_batch(fixed, moving, *, options=None, tile=UNSET, levels=UNSET,
                    iters=UNSET, lr=UNSET, bending_weight=UNSET, mode=UNSET,
                    impl=UNSET, grad_impl=UNSET, compute_dtype=UNSET,
                    similarity=UNSET, transform=UNSET, regularizer=UNSET,
-                   mesh=None, stop=UNSET):
+                   mesh=None, stop=UNSET, optimizer=UNSET):
     """Register a batch of volume pairs in a single jitted program.
 
     Args:
@@ -235,7 +298,11 @@ def register_batch(fixed, moving, *, options=None, tile=UNSET, levels=UNSET,
         ``repro.core.transform`` spec) picks the deformation model —
         ``"velocity"`` yields diffeomorphic, fold-free warps; ``regularizer``
         (``"none" | "bending"`` or a ``repro.core.regularizer`` spec) picks
-        the smoothness term.
+        the smoothness term.  ``optimizer`` (``"adam" | "lbfgs" |
+        "gauss_newton"`` or an ``engine.optimizer`` spec) picks the per-level
+        optimisation loop — the default ``"adam"`` is bit-identical to the
+        pre-registry engine; ``"gauss_newton"`` requires
+        ``similarity="ssd"``.
       mesh: optional ``jax.sharding.Mesh`` (see
         ``engine.shard.make_registration_mesh``) — the batch axis shards
         over the mesh's data axes (``REGISTRATION_RULES``), one program
@@ -278,7 +345,7 @@ def register_batch(fixed, moving, *, options=None, tile=UNSET, levels=UNSET,
              bending_weight=bending_weight, mode=mode, impl=impl,
              grad_impl=grad_impl, compute_dtype=compute_dtype,
              similarity=similarity, transform=transform,
-             regularizer=regularizer, stop=stop))
+             regularizer=regularizer, stop=stop, optimizer=optimizer))
 
     from repro.engine.autotune import resolve_options
 
@@ -317,12 +384,15 @@ def register_batch(fixed, moving, *, options=None, tile=UNSET, levels=UNSET,
 # ``register_batch`` runs each pyramid level to completion inside one
 # program, so a new pair can only join at batch boundaries.  The serving
 # scheduler (``engine.serve``) instead drives each level in fixed-size
-# *chunks* of masked Adam steps over a fixed-width lane array: after every
-# chunk the full optimiser state returns to the host, converged lanes are
-# harvested and queued pairs spliced into the freed slots.  The per-step
-# arithmetic is ``engine.convergence.plateau_step`` — the exact body of
-# ``adam_until`` — so a lane's trajectory is step-for-step identical to the
-# uninterrupted while-loop no matter how chunks and lane recycling slice it.
+# *chunks* of masked optimiser steps over a fixed-width lane array: after
+# every chunk the full optimiser state returns to the host, converged lanes
+# are harvested and queued pairs spliced into the freed slots.  The per-step
+# arithmetic is ``engine.convergence.optimize_plateau_step`` — the exact body
+# of ``optimize_until`` — so a lane's trajectory is step-for-step identical
+# to the uninterrupted while-loop no matter how chunks and lane recycling
+# slice it.  The optimiser state nests under the lane dict's ``"opt"`` key
+# (``engine.optimizer.init_state``), so splicing and masking are plain
+# ``jax.tree.map`` over the lane pytree for every registered optimiser.
 # ---------------------------------------------------------------------------
 
 
@@ -334,13 +404,13 @@ def level_vol_shapes(vol_shape, levels):
     return shapes[::-1]
 
 
-def _lane_vg(f, m, options):
+def _lane_obj(f, m, options):
     o = options
-    return jax.value_and_grad(ffd_level_loss(
+    return ffd_level_objective(
         f, m, tile=o.tile, bending_weight=o.bending_weight, mode=o.mode,
         impl=o.impl, grad_impl=o.grad_impl, compute_dtype=o.compute_dtype,
         similarity=o.similarity, transform=o.transform,
-        regularizer=o.regularizer, fused=o.fused))
+        regularizer=o.regularizer, fused=o.fused)
 
 
 @functools.lru_cache(maxsize=128)
@@ -353,21 +423,22 @@ def compile_level_init(lvl_shape, options):
     after a migration).  The returned state leaves are unbatched — the
     scheduler splices them into lane ``i`` of its stacked arrays with
     ``jax.tree.map(lambda a, s: a.at[i].set(s), state, lane)``.  Matches
-    ``adam_until``'s init exactly: the gradient at ``phi0`` seeds step 1 and
-    the initial loss seeds the best-so-far (so a pair the optimiser can only
-    make worse retires with its starting params).
+    ``optimize_until``'s init exactly: the gradient at ``phi0`` seeds step 1
+    and the initial loss seeds the best-so-far (so a pair the optimiser can
+    only make worse retires with its starting params).  The fresh optimiser
+    state for ``options.optimizer`` nests under the ``"opt"`` key.
     """
     del lvl_shape  # cache key only; jit re-traces on new shapes anyway
     return jax.jit(functools.partial(_lane_init, options=options))
 
 
 def _lane_init(phi, f, m, *, options):
-    loss0, g0 = _lane_vg(f, m, options)(phi)
-    z = jnp.zeros_like(phi)
+    loss0, g0 = _lane_obj(f, m, options).vg(phi)
     i0 = jnp.zeros((), jnp.int32)
     loss0 = loss0.astype(jnp.float32)
-    return dict(phi=phi, m=z, v=z, g=g0, k=i0, since=i0, best=loss0,
-                best_p=phi, loss=loss0, active=jnp.ones((), jnp.bool_))
+    return dict(phi=phi, opt=init_state(options.optimizer, phi), g=g0,
+                k=i0, since=i0, best=loss0, best_p=phi, loss=loss0,
+                active=jnp.ones((), jnp.bool_))
 
 
 @functools.lru_cache(maxsize=128)
@@ -385,7 +456,7 @@ def compile_level_splice(lvl_shape, options):
 
     def splice(state, F, M, i, phi, f, m):
         lane = _lane_init(phi, f, m, options=options)
-        state = {k: state[k].at[i].set(lane[k]) for k in state}
+        state = jax.tree.map(lambda a, s: a.at[i].set(s), state, lane)
         return state, F.at[i].set(f), M.at[i].set(m)
 
     donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
@@ -396,20 +467,25 @@ def compile_level_splice(lvl_shape, options):
 def compile_level_chunk(lvl_shape, options, chunk):
     """Jitted ``(state, fixed, moving) -> state``: one chunk of a level.
 
-    Runs ``chunk`` masked Adam steps over a ``(W, ...)`` lane array at this
-    level's resolution.  Each step re-evaluates every lane's liveness —
-    ``active`` (the slot holds a real pair) AND ``level_live`` (budget left,
-    patience window open, exactly ``adam_until``'s ``cond``) — and freezes
-    dead lanes by selecting their old state, the same per-lane masking the
-    ``while_loop`` batching rule applies.  A lane retired mid-chunk
-    therefore holds exactly its solo-run result when the state returns to
-    the host, and a freshly spliced lane starts its trajectory wherever the
-    chunk boundary fell.  The state argument is donated on accelerator
-    backends (the scheduler threads it through every call).
+    Runs ``chunk`` masked optimiser steps (``options.optimizer``) over a
+    ``(W, ...)`` lane array at this level's resolution.  Each step
+    re-evaluates every lane's liveness — ``active`` (the slot holds a real
+    pair) AND ``level_live`` (budget left, patience window open, exactly
+    ``optimize_until``'s ``cond``) — and freezes dead lanes by selecting
+    their old state, the same per-lane masking the ``while_loop`` batching
+    rule applies.  A lane retired mid-chunk therefore holds exactly its
+    solo-run result when the state returns to the host, and a freshly
+    spliced lane starts its trajectory wherever the chunk boundary fell.
+    Rejected second-order steps leave a lane's iterate numerically in place
+    (``engine.optimizer.opt_step``), indistinguishable from the masking —
+    either way the lane's next live step resumes its exact trajectory.  The
+    state argument is donated on accelerator backends (the scheduler
+    threads it through every call).
 
     With ``options.stop`` unset the masking reduces to the fixed-``iters``
-    budget and ``tol=-inf`` makes every step "improve", so ``best_p`` tracks
-    the current params and the result matches ``adam_scan``.
+    budget and ``tol=-inf`` makes every accepted step "improve", so
+    ``best_p`` tracks the current params and the result matches
+    ``optimize_scan``.
     """
     del lvl_shape  # cache key only
     o = options
@@ -417,19 +493,20 @@ def compile_level_chunk(lvl_shape, options, chunk):
     tol = jnp.float32(stop.tol) if stop is not None else -jnp.inf
 
     def lane(state, f, m):
-        vg = _lane_vg(f, m, o)
+        obj = _lane_obj(f, m, o)
 
         def one(s, _):
             live = jnp.logical_and(
                 s["active"],
                 level_live(s["k"], s["since"], stop=stop, iters=o.iters))
-            k, p, am, av, g, loss, since, best, best_p = plateau_step(
-                vg, s["k"], s["phi"], s["m"], s["v"], s["g"], s["since"],
-                s["best"], s["best_p"], tol=tol, lr=o.lr)
-            new = dict(phi=p, m=am, v=av, g=g, k=k, since=since, best=best,
+            k, p, opt, g, loss, since, best, best_p = optimize_plateau_step(
+                obj, o.optimizer, s["k"], s["phi"], s["opt"], s["g"],
+                s["loss"], s["since"], s["best"], s["best_p"],
+                tol=tol, lr=o.lr)
+            new = dict(phi=p, opt=opt, g=g, k=k, since=since, best=best,
                        best_p=best_p, loss=loss, active=s["active"])
-            return {key: jnp.where(live, new[key], s[key])
-                    for key in new}, None
+            return jax.tree.map(
+                lambda n, old: jnp.where(live, n, old), new, s), None
 
         s, _ = jax.lax.scan(one, state, None, length=int(chunk))
         return s

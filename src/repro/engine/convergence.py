@@ -1,33 +1,47 @@
-"""Convergence-aware optimisation: early-stopped ``lax.while_loop`` Adam.
+"""Convergence-aware optimisation: the early-stopped ``lax.while_loop``.
 
-The fixed-``iters`` ``lax.scan`` loop (``engine.loop.adam_scan``) pays every
-pair the full BSI budget per pyramid level even after the objective has
-plateaued.  Budelmann et al. (PAPERS.md) hit their intra-operative wall-clock
-targets precisely by stopping each level when the objective stalls, and
-Brunn et al. show the win compounds across pyramid levels — this module is
-that stopping rule:
+The fixed-``iters`` ``lax.scan`` loop (``engine.loop.optimize_scan``) pays
+every pair the full BSI budget per pyramid level even after the objective
+has plateaued.  Budelmann et al. (PAPERS.md) hit their intra-operative
+wall-clock targets precisely by stopping each level when the objective
+stalls, and Brunn et al. show the win compounds across pyramid levels —
+this module is that stopping rule:
 
 * :class:`ConvergenceConfig` — the ``stop=`` knob threaded through
   ``ffd_register`` / ``affine_register`` / ``register_batch`` (and the
   sharded pipeline): stop a level when the relative loss improvement over a
   ``patience`` window drops below ``tol``, or at ``max_iters``.
-* :func:`adam_until` — the ``lax.while_loop`` counterpart of ``adam_scan``:
-  same Adam arithmetic (shared :func:`adam_update` step), but the loop exits
-  as soon as the criterion fires, returning ``(params, trace, steps_taken)``
-  with the trace padded to the static ``max_iters`` shape so it stays
-  ``jit``/``vmap``-compatible.
+* :func:`optimize_until` — the ``lax.while_loop`` counterpart of
+  ``optimize_scan``, generic over the ``optimizer=`` registry
+  (``engine.optimizer``); :func:`adam_until` is its Adam face, bit-identical
+  to the pre-registry loop.  The loop exits as soon as the criterion fires,
+  returning ``(params, trace, steps_taken)`` with the trace padded to the
+  static ``max_iters`` shape so it stays ``jit``/``vmap``-compatible.
 
 Batched masking comes for free: under ``jax.vmap`` a ``lax.while_loop`` runs
 until *every* lane's condition is false, applying each lane's body update
-through a per-lane select — converged lanes' carries (params, moments,
-trace) freeze at their own stopping point, so a batched lane finishes with
-exactly the params its solo run would have produced, and the program exits
-as soon as the slowest lane converges.  The wall-clock win is therefore
-batch-level: an all-easy (or padded-filler) batch finishes in a fraction of
-the budget, while a mixed batch is paced by its slowest pair (frozen lanes
-still execute masked BSI work until the exit — SPMD has no per-lane
-skipping).  Per-pair savings in full apply on the unbatched
+through a per-lane select — converged lanes' carries (params, optimiser
+state, trace) freeze at their own stopping point, so a batched lane finishes
+with exactly the params its solo run would have produced, and the program
+exits as soon as the slowest lane converges.  The wall-clock win is
+therefore batch-level: an all-easy (or padded-filler) batch finishes in a
+fraction of the budget, while a mixed batch is paced by its slowest pair
+(frozen lanes still execute masked BSI work until the exit — SPMD has no
+per-lane skipping).  Per-pair savings in full apply on the unbatched
 ``ffd_register`` / ``affine_register`` path.
+
+Patience semantics with rejected steps (second-order optimisers)
+----------------------------------------------------------------
+A step "improves" only when it (a) was *accepted* by its optimiser (the
+``ok`` flag of ``engine.optimizer.opt_step``) and (b) beats the best loss
+seen so far by a relative ``tol``.  A rejected step — an L-BFGS line search
+that backtracked to exhaustion, a Gauss-Newton trial the LM damping refused
+— leaves the iterate exactly in place and **never counts as progress**: its
+``since`` counter still advances, so a lane whose line search collapses
+``patience`` times in a row freezes (retiring with its best-so-far params,
+which are finite by construction) instead of spinning or NaN-ing.  The
+best-so-far restore is unaffected: ``best_p`` only ever absorbs accepted,
+strictly-improving iterates.
 """
 from __future__ import annotations
 
@@ -36,8 +50,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.engine.optimizer import (AdamOptimizer, Objective, adam_update,
+                                    init_state, make_objective, opt_step,
+                                    resolve_optimizer)
+
 __all__ = ["ConvergenceConfig", "adam_update", "adam_until", "check_stop",
-           "plateau_step", "level_live"]
+           "optimize_plateau_step", "optimize_until", "plateau_step",
+           "level_live"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,51 +115,54 @@ def check_stop(stop, iters):
     return stop.resolve(iters)
 
 
-def adam_update(p, m, v, g, i, *, lr, b1=0.9, b2=0.999, eps=1e-8):
-    """One Adam update (bias-corrected with step index ``i``, 1-based).
+def optimize_plateau_step(obj, optimizer, k, p, opt, g, loss, since, best,
+                          best_p, *, tol, lr):
+    """One resumable optimisation step of the plateau-stopped loop.
 
-    The single source of the update arithmetic — shared by the fixed-length
-    scan (``engine.loop.adam_scan``) and the early-stopped while loop
-    (:func:`adam_until`) so the two trajectories are step-for-step identical
-    until the stopping rule fires.
-    """
-    m = b1 * m + (1 - b1) * g
-    v = b2 * v + (1 - b2) * g * g
-    mh = m / (1 - b1**i)
-    vh = v / (1 - b2**i)
-    return p - lr * mh / (jnp.sqrt(vh) + eps), m, v
-
-
-def plateau_step(vg, k, p, m, v, g, since, best, best_p, *, tol, lr,
-                 b1=0.9, b2=0.999, eps=1e-8):
-    """One resumable optimisation step of the plateau-stopped Adam loop.
-
-    The single source of the per-step arithmetic shared by the
-    run-to-completion ``lax.while_loop`` (:func:`adam_until`) and the
+    The single source of the per-step bookkeeping shared by the
+    run-to-completion ``lax.while_loop`` (:func:`optimize_until`) and the
     chunked/resumable serving loop (``engine.serve`` via
-    ``engine.batch.compile_level_chunk``): apply the Adam update seeded by
-    the carried gradient ``g``, evaluate ``vg`` at the new params, and fold
-    the best-so-far / patience bookkeeping.  Because the whole step state
+    ``engine.batch.compile_level_chunk``): run one ``opt_step`` of the
+    registered ``optimizer`` on :class:`~repro.engine.optimizer.Objective`
+    ``obj`` (seeded by the carried gradient/loss at ``p``), then fold the
+    best-so-far / patience bookkeeping.  Because the whole step state
     travels through the arguments, a caller can run any number of steps,
     hand the state to the host, and resume later — the trajectory is
     step-for-step identical to an uninterrupted loop.
 
-    Returns ``(k+1, p, m, v, g, loss, since, best, best_p)`` where ``loss``
-    is the post-update loss (the step's trace entry).
+    A step "improves" when it was *accepted* by the optimiser AND beats the
+    best loss so far by a relative ``tol`` (see the module docstring on
+    rejected steps); ``since`` counts consecutive non-improving steps, and
+    the best params ride along so stopping never returns a worse point than
+    the loop already visited.
+
+    Returns ``(k+1, p, opt, g, loss, since, best, best_p)`` where ``loss``
+    is the post-step loss (the step's trace entry).
     """
-    i = (k + 1).astype(jnp.float32)  # 1-based bias-correction index
-    p, m, v = adam_update(p, m, v, g, i, lr=lr, b1=b1, b2=b2, eps=eps)
-    loss, g = vg(p)
-    # a step "improves" when it beats the best loss so far by a relative
-    # tol; `since` counts consecutive non-improving steps, and the best
-    # params ride along so stopping never returns a worse point than the
-    # loop already visited
+    p, opt, g, loss, ok = opt_step(optimizer, obj, k, p, opt, g, loss,
+                                   lr=lr)
     gain = (best - loss) / jnp.maximum(jnp.abs(best), jnp.float32(1e-12))
-    improved = gain > tol
+    improved = jnp.logical_and(ok, gain > tol)
     best_p = jnp.where(improved, p, best_p)
     best = jnp.where(improved, loss, best)
     since = jnp.where(improved, 0, since + 1)
-    return k + 1, p, m, v, g, loss, since, best, best_p
+    return k + 1, p, opt, g, loss, since, best, best_p
+
+
+def plateau_step(vg, k, p, m, v, g, since, best, best_p, *, tol, lr,
+                 b1=0.9, b2=0.999, eps=1e-8):
+    """The Adam spelling of :func:`optimize_plateau_step` (compatibility).
+
+    Kept for callers that still hold the moments as separate ``(m, v)``
+    operands; new code should carry the optimiser-state dict.  Returns
+    ``(k+1, p, m, v, g, loss, since, best, best_p)`` exactly as before.
+    """
+    obj = Objective(loss=None, vg=vg)
+    spec = AdamOptimizer(b1=b1, b2=b2, eps=eps)
+    k1, p, opt, g, loss, since, best, best_p = optimize_plateau_step(
+        obj, spec, k, p, {"m": m, "v": v}, g, best, since, best, best_p,
+        tol=tol, lr=lr)
+    return k1, p, opt["m"], opt["v"], g, loss, since, best, best_p
 
 
 def level_live(k, since, *, stop, iters=None):
@@ -157,15 +179,16 @@ def level_live(k, since, *, stop, iters=None):
                            since < int(stop.patience))
 
 
-def adam_until(loss_fn, params, *, stop, lr, b1=0.9, b2=0.999, eps=1e-8,
-               m=None, v=None):
-    """Adam as a ``lax.while_loop`` that exits when the loss plateaus.
+def optimize_until(obj, params, *, optimizer, stop, lr, opt=None):
+    """A registered optimiser as a ``lax.while_loop`` that exits on plateau.
 
-    The early-stopped counterpart of ``engine.loop.adam_scan``: same update
-    arithmetic (:func:`adam_update`), same trace convention (``trace[k]`` is
-    the loss after ``k+1`` updates), but the loop stops as soon as
-    ``stop.patience`` consecutive steps fail to improve the best loss by a
-    relative ``stop.tol`` — or at ``stop.max_iters``.
+    The early-stopped counterpart of ``engine.loop.optimize_scan``: same
+    per-step arithmetic (``engine.optimizer.opt_step``), same trace
+    convention (``trace[k]`` is the loss after ``k+1`` steps), but the loop
+    stops as soon as ``stop.patience`` consecutive steps fail to improve
+    the best loss by a relative ``stop.tol`` — or at ``stop.max_iters``.
+    Rejected steps (collapsed line search, refused LM trial) count as
+    non-improving, so a stuck lane freezes after ``patience`` of them.
 
     Returns ``(params, trace, steps_taken)``.  ``params`` are the
     best-loss params visited (the start counts: a pair that the optimiser
@@ -180,23 +203,24 @@ def adam_until(loss_fn, params, *, stop, lr, b1=0.9, b2=0.999, eps=1e-8,
     exactly like the fixed-length trace.  ``steps_taken`` is a traced ``int32``
     scalar (per-lane under ``vmap``).
 
-    Under ``vmap``, lanes that converge first freeze (their whole carry is
-    select-masked by the batching rule) while the loop runs on for the
-    others; the batched program exits when the last lane is done.
+    Under ``vmap``, lanes that converge first freeze (their whole carry —
+    params, optimiser state, trace — is select-masked by the batching rule)
+    while the loop runs on for the others; the batched program exits when
+    the last lane is done.
     """
     if not isinstance(stop, ConvergenceConfig):
         raise TypeError(f"stop must be a ConvergenceConfig, got {stop!r}")
     if stop.max_iters is None:
         raise ValueError(
             "stop.max_iters is unresolved; call stop.resolve(iters) first")
+    spec = resolve_optimizer(optimizer)
     max_iters = int(stop.max_iters)
     patience = int(stop.patience)
     tol = jnp.float32(stop.tol)
-    m = jnp.zeros_like(params) if m is None else m
-    v = jnp.zeros_like(params) if v is None else v
+    opt = init_state(spec, params) if opt is None else opt
 
-    vg = jax.value_and_grad(loss_fn)
-    loss0, g0 = vg(params)  # gradient at the initial params seeds step 1
+    loss0, g0 = obj.vg(params)  # gradient at the initial params seeds step 1
+    loss0 = loss0.astype(jnp.float32)
 
     def cond(carry):
         k = carry[0]
@@ -204,18 +228,17 @@ def adam_until(loss_fn, params, *, stop, lr, b1=0.9, b2=0.999, eps=1e-8,
         return jnp.logical_and(k < max_iters, since < patience)
 
     def body(carry):
-        k, p, m, v, g, trace, since, best, best_p = carry
-        # the shared resumable step (see plateau_step); the post-update loss
-        # closes slot k of the trace
-        k1, p, m, v, g, loss, since, best, best_p = plateau_step(
-            vg, k, p, m, v, g, since, best, best_p,
-            tol=tol, lr=lr, b1=b1, b2=b2, eps=eps)
+        k, p, opt, g, loss, trace, since, best, best_p = carry
+        # the shared resumable step; the post-step loss closes trace slot k
+        k1, p, opt, g, loss, since, best, best_p = optimize_plateau_step(
+            obj, spec, k, p, opt, g, loss, since, best, best_p,
+            tol=tol, lr=lr)
         trace = jax.lax.dynamic_update_index_in_dim(trace, loss, k, 0)
-        return k1, p, m, v, g, trace, since, best, best_p
+        return k1, p, opt, g, loss, trace, since, best, best_p
 
-    carry = (jnp.zeros((), jnp.int32), params, m, v, g0,
+    carry = (jnp.zeros((), jnp.int32), params, opt, g0, loss0,
              jnp.zeros((max_iters,), jnp.float32),
-             jnp.zeros((), jnp.int32), loss0.astype(jnp.float32), params)
+             jnp.zeros((), jnp.int32), loss0, params)
     out = jax.lax.while_loop(cond, body, carry)
     k, trace, best, best_p = out[0], out[5], out[7], out[8]
 
@@ -226,3 +249,21 @@ def adam_until(loss_fn, params, *, stop, lr, b1=0.9, b2=0.999, eps=1e-8,
     trace = jnp.where(jnp.arange(max_iters) < k, trace, best)
     trace = trace.at[-1].set(best)
     return best_p, trace, k
+
+
+def adam_until(loss_fn, params, *, stop, lr, b1=0.9, b2=0.999, eps=1e-8,
+               m=None, v=None):
+    """The Adam face of :func:`optimize_until` (the historical API).
+
+    Same update arithmetic as the pre-registry loop (the shared
+    :func:`adam_update` through the ``adam`` registry entry), same returns;
+    the ``m=``/``v=`` keywords still seed the moments for resumption.
+    """
+    obj = make_objective(loss_fn)
+    opt = None
+    if m is not None or v is not None:
+        opt = {"m": jnp.zeros_like(params) if m is None else m,
+               "v": jnp.zeros_like(params) if v is None else v}
+    return optimize_until(obj, params,
+                          optimizer=AdamOptimizer(b1=b1, b2=b2, eps=eps),
+                          stop=stop, lr=lr, opt=opt)

@@ -1,4 +1,4 @@
-"""Device-resident optimisation loops: ``jax.lax.scan`` over Adam steps.
+"""Device-resident optimisation loops: ``jax.lax.scan`` over optimiser steps.
 
 The seed drove every optimiser from a Python ``for`` loop — one XLA dispatch
 per step, per-call re-jits (the ``step_fn`` closure was redefined on every
@@ -6,14 +6,18 @@ per step, per-call re-jits (the ``step_fn`` closure was redefined on every
 al. and Brunn et al. (PAPERS.md) get their registration wall-clock wins from
 keeping the whole loop resident on the accelerator; this module is that loop:
 
-* ``adam_scan`` — the pure form: ``iters`` Adam steps as a single
+* ``optimize_scan`` — the pure form, generic over the ``optimizer=``
+  registry (``engine.optimizer``): ``iters`` optimiser steps as a single
   ``lax.scan``, traceable, so it nests under ``jax.vmap`` (the batched
   engine) and under an outer ``jit`` (one compile per pyramid level).
-* ``make_adam_runner`` — the compiled form: a jitted runner whose
-  ``(params, m, v)`` buffers are donated on accelerator backends, and whose
-  data operands are arguments (not closures) so one compile serves every
-  call with the same shapes.  ``stop=`` swaps the fixed-length scan for the
-  early-stopped ``lax.while_loop`` (``engine.convergence.adam_until``).
+  ``adam_scan`` is its historical Adam face, kept verbatim as the
+  bit-identity anchor the parity tests compare against.
+* ``make_adam_runner`` — the compiled form: a jitted runner whose params
+  buffer is donated on accelerator backends, and whose data operands are
+  arguments (not closures) so one compile serves every call with the same
+  shapes.  The optimiser comes from ``options.optimizer`` (default
+  ``"adam"``); ``stop=`` swaps the fixed-length scan for the early-stopped
+  ``lax.while_loop`` (``engine.convergence.optimize_until``).
 """
 from __future__ import annotations
 
@@ -21,9 +25,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.options import UNSET, RegistrationOptions, merge_legacy_options
-from repro.engine.convergence import adam_update, adam_until, check_stop
+from repro.engine.convergence import adam_update, check_stop, optimize_until
+from repro.engine.optimizer import (AdamOptimizer, Objective, init_state,
+                                    make_objective, opt_step,
+                                    resolve_optimizer)
 
-__all__ = ["adam_scan", "make_adam_runner"]
+__all__ = ["adam_scan", "make_adam_runner", "optimize_scan"]
 
 
 def adam_scan(loss_fn, params, *, iters, lr, b1=0.9, b2=0.999, eps=1e-8,
@@ -39,11 +46,10 @@ def adam_scan(loss_fn, params, *, iters, lr, b1=0.9, b2=0.999, eps=1e-8,
     evaluates ``value_and_grad`` at the new params — the loss closes the
     step's own trace slot and the gradient seeds the next step — the same
     step shape as the early-stopped ``engine.convergence.adam_until``, so
-    the two trajectories match step for step.  The former separate
-    trace-closing forward pass (``loss_fn(p)`` after the scan) is gone; its
-    cost moved into the final step's in-scan evaluation, whose gradient is
-    unused (a forward traded for a backward — a wash under the analytic
-    gather adjoint, where the two cost about the same).
+    the two trajectories match step for step.  Kept as the literal seed
+    loop (not routed through the optimiser registry) on purpose: it is the
+    bit-identity anchor ``tests/test_optimizer.py`` compares the registry's
+    ``adam`` entry against.
     """
     if iters < 1:
         raise ValueError(f"iters must be >= 1, got {iters}")
@@ -64,26 +70,62 @@ def adam_scan(loss_fn, params, *, iters, lr, b1=0.9, b2=0.999, eps=1e-8,
     return p, trace
 
 
-def make_adam_runner(loss_builder, *, options=None, iters=UNSET, lr=UNSET,
-                     b1=0.9, b2=0.999, eps=1e-8, donate=None, stop=UNSET):
-    """Build a jitted ``(params, m, v, *data) -> ...`` runner.
+def optimize_scan(obj, params, *, optimizer, iters, lr, opt=None):
+    """Run ``iters`` steps of a registered optimiser as one ``lax.scan``.
 
-    ``loss_builder(*data)`` returns the scalar loss function of the params;
-    the data arrays travel through jit as arguments, so callers that cache
-    the runner (e.g. by shape) pay one compile per configuration, not per
-    call.  ``(params, m, v)`` are donated unless ``donate=False`` (donation
-    is skipped on CPU, where XLA cannot honour it and only warns).
+    The registry-generic form of :func:`adam_scan`: same trace convention
+    (``trace[k]`` is the loss after ``k+1`` steps), same purity (composes
+    with ``jit``/``vmap`` at the call site), but the per-step arithmetic is
+    ``engine.optimizer.opt_step`` on an ``Objective`` — with
+    ``optimizer="adam"`` the trajectory is bit-identical to
+    :func:`adam_scan`.  Rejected second-order steps (collapsed line search,
+    refused LM trial) leave the iterate in place for that slot; the fixed
+    budget keeps scanning either way.  Returns ``(params, trace)``.
+    """
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
+    spec = resolve_optimizer(optimizer)
+    opt = init_state(spec, params) if opt is None else opt
+
+    loss0, g0 = obj.vg(params)  # gradient at the initial params seeds step 1
+    loss0 = loss0.astype(jnp.float32)
+
+    def step(carry, k):
+        p, opt, g, loss = carry
+        p, opt, g, loss, _ = opt_step(spec, obj, k, p, opt, g, loss, lr=lr)
+        return (p, opt, g, loss), loss
+
+    ks = jnp.arange(iters, dtype=jnp.int32)
+    (p, _, _, _), trace = jax.lax.scan(step, (params, opt, g0, loss0), ks)
+    return p, trace
+
+
+def make_adam_runner(loss_builder, *, options=None, iters=UNSET, lr=UNSET,
+                     b1=0.9, b2=0.999, eps=1e-8, donate=None, stop=UNSET,
+                     optimizer=UNSET):
+    """Build a jitted ``(params, *data) -> ...`` runner.
+
+    ``loss_builder(*data)`` returns the scalar loss function of the params
+    — or a full ``engine.optimizer.Objective`` (needed for residual-form
+    optimisers like ``gauss_newton``); the data arrays travel through jit
+    as arguments, so callers that cache the runner (e.g. by shape) pay one
+    compile per configuration, not per call.  The optimiser state is built
+    inside the program (``init_state``), so the runner takes only the
+    params; ``params`` is donated unless ``donate=False`` (donation is
+    skipped on CPU, where XLA cannot honour it and only warns).
 
     The loop hyperparameters come from ``options=`` (a
-    ``repro.core.RegistrationOptions`` — only its ``iters`` / ``lr`` /
-    ``stop`` fields apply here); the legacy ``iters=`` / ``lr=`` / ``stop=``
-    keywords still work via the deprecation shim.  ``b1``/``b2``/``eps`` and
-    ``donate`` are loop-level knobs outside the options object.
+    ``repro.core.RegistrationOptions`` — its ``iters`` / ``lr`` / ``stop``
+    / ``optimizer`` fields apply here); the legacy ``iters=`` / ``lr=`` /
+    ``stop=`` / ``optimizer=`` keywords still work via the deprecation
+    shim.  ``b1``/``b2``/``eps`` are Adam-only knobs outside the options
+    object (ignored by the second-order entries, which fold their own
+    hyperparameters into their specs); ``donate`` stays a loop-level knob.
 
     With no stopping rule the runner is the fixed-length scan and returns
     ``(params, trace)``.  With a ``ConvergenceConfig`` it runs
-    ``adam_until`` instead and returns ``(params, trace, steps_taken)`` —
-    the trace padded to ``stop.max_iters`` (see ``engine.convergence``).
+    ``optimize_until`` instead and returns ``(params, trace, steps_taken)``
+    — the trace padded to ``stop.max_iters`` (see ``engine.convergence``).
     """
     if options is None and (iters is UNSET or lr is UNSET):
         raise TypeError(
@@ -91,19 +133,22 @@ def make_adam_runner(loss_builder, *, options=None, iters=UNSET, lr=UNSET,
             "legacy iters=/lr= keywords")
     opts = merge_legacy_options(
         "make_adam_runner", options,
-        dict(iters=iters, lr=lr, stop=stop),
+        dict(iters=iters, lr=lr, stop=stop, optimizer=optimizer),
         defaults=RegistrationOptions())
     iters, lr = opts.iters, opts.lr
+    spec = resolve_optimizer(opts.optimizer)
+    if isinstance(spec, AdamOptimizer) and spec == AdamOptimizer():
+        # fold the legacy Adam knobs into the spec (defaults are a no-op)
+        spec = AdamOptimizer(b1=b1, b2=b2, eps=eps)
     if donate is None:
         donate = jax.default_backend() != "cpu"
     stop = check_stop(opts.stop, iters)
 
-    def run(p, m, v, *data):
-        loss_fn = loss_builder(*data)
+    def run(p, *data):
+        built = loss_builder(*data)
+        obj = built if isinstance(built, Objective) else make_objective(built)
         if stop is None:
-            return adam_scan(loss_fn, p, iters=iters, lr=lr,
-                             b1=b1, b2=b2, eps=eps, m=m, v=v)
-        return adam_until(loss_fn, p, stop=stop, lr=lr,
-                          b1=b1, b2=b2, eps=eps, m=m, v=v)
+            return optimize_scan(obj, p, optimizer=spec, iters=iters, lr=lr)
+        return optimize_until(obj, p, optimizer=spec, stop=stop, lr=lr)
 
-    return jax.jit(run, donate_argnums=(0, 1, 2) if donate else ())
+    return jax.jit(run, donate_argnums=(0,) if donate else ())

@@ -1,0 +1,540 @@
+"""Pluggable optimisers: the ``optimizer=`` registry behind every loop.
+
+Adam used to be welded into every layer of the engine — the update in
+``engine.convergence``, the scan in ``engine.loop``, the lane chunks in
+``engine.batch``/``engine.serve``, the sharded levels in ``engine.shard``
+and the runners in ``core.registration``.  The intra-operative latency
+targets the ROADMAP points at are reached with *second-order* methods:
+Budelmann et al. ("Fully-deformable 3D image registration in two seconds",
+PAPERS.md) use L-BFGS, CLAIRE (Brunn et al.) uses Gauss-Newton–Krylov, and
+both converge hard pairs in tens of outer iterations where a first-order
+loop needs hundreds.  This module makes the optimiser a layer (the shared
+``core.registry`` shape, exactly like ``transform=``/``regularizer=``):
+
+``adam``
+    The historical loop, bit-identical to the pre-registry engine: the
+    shared :func:`adam_update` arithmetic, 1-based f32 bias correction,
+    update-then-evaluate step shape.
+
+``lbfgs``
+    Limited-memory BFGS: two-loop recursion over a ``history``-pair
+    window (statically unrolled, validity-masked — ``lax.scan``/``vmap``
+    safe), :math:`\\gamma = s^\\top y / y^\\top y` initial scaling, and a
+    backtracking Armijo line search expressed as a *bounded*
+    ``lax.while_loop``.  A collapsed line search leaves the iterate (and
+    carried gradient/loss) exactly unchanged and reports ``ok=False`` —
+    the patience rule counts it as a non-improving step, so a stuck lane
+    freezes instead of NaN-ing.  All state is fp32 even under
+    ``compute_dtype="bfloat16"`` (params are fp32 throughout the stack;
+    the curvature pairs are explicitly cast).
+
+``gauss_newton``
+    Gauss-Newton for least-squares similarities (SSD): the objective
+    exposes its residual ``r`` with ``sim = mean(r**2)``, the
+    :math:`J^\\top J` product is matrix-free (``jax.linearize`` of the
+    residual + the linear transpose; the residual is built on the
+    XLA-differentiable BSI graph, since forward mode cannot enter the
+    analytic custom-VJP adjoint), the regulariser's exact Hessian product
+    comes from
+    linearising its gradient (both built-in regularizers are quadratic),
+    and the normal equations are solved by CG with a fixed iteration cap.
+    Levenberg–Marquardt damping is the fallback: a rejected trial step
+    (non-finite or non-decreasing loss) leaves the iterate unchanged
+    (``ok=False``), raises the damping, and retries next step.
+
+Specs are small frozen dataclasses, so a resolved optimiser drops straight
+into ``RegistrationOptions`` as a hashable program-cache-key field; the
+factory spellings (``lbfgs(history=10)``) build parameter variants.  The
+uniform per-step protocol is :func:`opt_step` (carry invariant: ``g`` and
+``loss`` are the gradient/loss *at the current params*), with
+:func:`init_state` building the per-optimiser state pytree — nested under
+the lane-state dicts of the resumable serving loop, so splicing, masking
+and sharding treat it like any other leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.registry import Registry
+
+__all__ = [
+    "OPTIMIZERS",
+    "AdamOptimizer",
+    "LbfgsOptimizer",
+    "GaussNewtonOptimizer",
+    "Objective",
+    "adam",
+    "adam_update",
+    "available_optimizers",
+    "gauss_newton",
+    "init_state",
+    "lbfgs",
+    "make_objective",
+    "opt_step",
+    "optimizer_token",
+    "resolve_optimizer",
+]
+
+
+# --- specs -------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamOptimizer:
+    """The historical first-order loop (default; bit-identical to it)."""
+
+    name = "adam"
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+    def __post_init__(self):
+        for field in ("b1", "b2"):
+            v = float(getattr(self, field))
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"adam {field} must be in [0, 1), got {v}")
+            object.__setattr__(self, field, v)
+        eps = float(self.eps)
+        if not eps > 0:
+            raise ValueError(f"adam eps must be > 0, got {eps}")
+        object.__setattr__(self, "eps", eps)
+
+
+@dataclasses.dataclass(frozen=True)
+class LbfgsOptimizer:
+    """Limited-memory BFGS with a backtracking Armijo line search.
+
+    ``history`` curvature pairs bound the two-loop recursion (the default
+    10 matches scipy's L-BFGS-B ``m``; more pairs cost ``history`` extra
+    grid-sized buffers per lane).  The line search backtracks
+    ``t = t0, t0*shrink, ...`` for at most ``max_ls`` evaluations against
+    the Armijo condition with slope fraction ``c1``, then refines the
+    accepted step once by quadratic interpolation; if nothing is accepted
+    the step is rejected (``ok=False`` — the iterate does not move and the
+    curvature window resets).  ``lr`` is ignored: the natural step of a
+    quasi-Newton direction is 1 and the line search owns the scaling.
+    """
+
+    name = "lbfgs"
+    history: int = 10
+    max_ls: int = 10
+    c1: float = 1e-4
+    shrink: float = 0.5
+
+    def __post_init__(self):
+        h = int(self.history)
+        if not 1 <= h <= 64:
+            raise ValueError(f"lbfgs history must be in [1, 64], got {h}")
+        object.__setattr__(self, "history", h)
+        m = int(self.max_ls)
+        if not 1 <= m <= 64:
+            raise ValueError(f"lbfgs max_ls must be in [1, 64], got {m}")
+        object.__setattr__(self, "max_ls", m)
+        c1 = float(self.c1)
+        if not 0.0 < c1 < 1.0:
+            raise ValueError(f"lbfgs c1 must be in (0, 1), got {c1}")
+        object.__setattr__(self, "c1", c1)
+        s = float(self.shrink)
+        if not 0.0 < s < 1.0:
+            raise ValueError(f"lbfgs shrink must be in (0, 1), got {s}")
+        object.__setattr__(self, "shrink", s)
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussNewtonOptimizer:
+    """Gauss-Newton with CG inner solves and Levenberg–Marquardt damping.
+
+    Each step solves ``(J^T J * 2/N + H_reg + damping I) d = -g`` with at
+    most ``cg_iters`` CG iterations (matrix-free ``J^T J`` products) and
+    trials ``p + d``: an accepted step (finite, lower loss) divides the
+    damping by ``damp_down``, a rejected one multiplies it by ``damp_up``
+    and leaves the iterate unchanged (``ok=False``) — the LM fallback that
+    degrades toward (damped) gradient descent instead of diverging.  Only
+    valid for residual objectives (``similarity="ssd"``); ``lr`` is
+    ignored — the Newton step has its own natural length.
+    """
+
+    name = "gauss_newton"
+    cg_iters: int = 10
+    damping: float = 1e-3
+    damp_up: float = 10.0
+    damp_down: float = 3.0
+    min_damping: float = 1e-8
+    max_damping: float = 1e8
+
+    def __post_init__(self):
+        k = int(self.cg_iters)
+        if not 1 <= k <= 256:
+            raise ValueError(
+                f"gauss_newton cg_iters must be in [1, 256], got {k}")
+        object.__setattr__(self, "cg_iters", k)
+        for field in ("damping", "damp_up", "damp_down",
+                      "min_damping", "max_damping"):
+            v = float(getattr(self, field))
+            if not v > 0:
+                raise ValueError(
+                    f"gauss_newton {field} must be > 0, got {v}")
+            object.__setattr__(self, field, v)
+        if self.damp_up <= 1.0 or self.damp_down <= 1.0:
+            raise ValueError(
+                "gauss_newton damp_up/damp_down must be > 1 (they "
+                "multiply/divide the damping on reject/accept), got "
+                f"{self.damp_up}/{self.damp_down}")
+
+
+_SPEC_TYPES = (AdamOptimizer, LbfgsOptimizer, GaussNewtonOptimizer)
+
+OPTIMIZERS = Registry(
+    "optimizer", passthrough=lambda o: isinstance(o, _SPEC_TYPES))
+
+
+def adam(b1=0.9, b2=0.999, eps=1e-8) -> AdamOptimizer:
+    """The historical Adam loop spec (the default)."""
+    return AdamOptimizer(b1=b1, b2=b2, eps=eps)
+
+
+def lbfgs(history=10, max_ls=10, c1=1e-4, shrink=0.5) -> LbfgsOptimizer:
+    """An L-BFGS spec with the given history window / line-search knobs."""
+    return LbfgsOptimizer(history=history, max_ls=max_ls, c1=c1,
+                          shrink=shrink)
+
+
+def gauss_newton(cg_iters=10, damping=1e-3, damp_up=10.0,
+                 damp_down=3.0) -> GaussNewtonOptimizer:
+    """A Gauss-Newton/LM spec with the given CG cap and damping schedule."""
+    return GaussNewtonOptimizer(cg_iters=cg_iters, damping=damping,
+                                damp_up=damp_up, damp_down=damp_down)
+
+
+OPTIMIZERS.register("adam", AdamOptimizer())
+OPTIMIZERS.register("lbfgs", LbfgsOptimizer())
+OPTIMIZERS.register("gauss_newton", GaussNewtonOptimizer())
+
+
+def available_optimizers():
+    """Sorted names of the registered optimisers."""
+    return OPTIMIZERS.names()
+
+
+def resolve_optimizer(optimizer):
+    """Resolve a name-or-spec to a frozen optimiser spec instance."""
+    _, spec = OPTIMIZERS.resolve(optimizer)
+    return spec
+
+
+def optimizer_token(optimizer) -> str:
+    """A short string naming the optimiser for cache keys and logs.
+
+    The default Adam tokenises to plain ``"adam"`` so pre-registry cache
+    entries (runner ``lru_cache`` keys aside, the autotune *disk* cache)
+    stay valid — only non-default optimisers grow a token.
+    """
+    spec = resolve_optimizer(optimizer)
+    if isinstance(spec, AdamOptimizer):
+        if spec == AdamOptimizer():
+            return "adam"
+        return f"adam(b1={spec.b1:g},b2={spec.b2:g},eps={spec.eps:g})"
+    if isinstance(spec, LbfgsOptimizer):
+        return f"lbfgs(history={spec.history},max_ls={spec.max_ls})"
+    return (f"gauss_newton(cg={spec.cg_iters},"
+            f"damping={spec.damping:g})")
+
+
+# --- the objective -----------------------------------------------------------
+
+
+class Objective(NamedTuple):
+    """What a step needs to know about the function it minimises.
+
+    ``loss``/``vg`` are always present (``vg`` is
+    ``jax.value_and_grad(loss)`` — the one gradient evaluation per step
+    every optimiser shares).  ``residual``/``reg`` exist only for
+    least-squares objectives: ``residual(p)`` is the flat residual vector
+    with ``similarity = mean(residual**2)`` and ``reg(p)`` the (quadratic)
+    regularisation term, so ``loss(p) == mean(residual(p)**2) + reg(p)`` —
+    what Gauss-Newton linearises.  First-order optimisers ignore them.
+    """
+
+    loss: Callable
+    vg: Callable
+    residual: Any = None
+    reg: Any = None
+
+
+def make_objective(loss_fn, *, residual_fn=None, reg_fn=None) -> Objective:
+    """Wrap a scalar loss (and optional residual form) as an :class:`Objective`.
+
+    When only ``residual_fn``/``reg_fn`` are given (``loss_fn=None``), the
+    loss is assembled as ``mean(residual**2) + reg`` — but callers that
+    already have the composite loss should pass it, so the scalar path is
+    bit-identical to the objective the first-order loop always ran.
+    """
+    if loss_fn is None:
+        if residual_fn is None:
+            raise ValueError("make_objective needs loss_fn or residual_fn")
+
+        def loss_fn(p):
+            r = residual_fn(p)
+            sim = jnp.mean(jnp.square(r))
+            return sim + (reg_fn(p) if reg_fn is not None else 0.0)
+
+    return Objective(loss=loss_fn, vg=jax.value_and_grad(loss_fn),
+                     residual=residual_fn, reg=reg_fn)
+
+
+# --- the shared update arithmetic -------------------------------------------
+
+
+def adam_update(p, m, v, g, i, *, lr, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam update (bias-corrected with step index ``i``, 1-based).
+
+    The single source of the update arithmetic — shared (via the ``adam``
+    registry entry) by the fixed-length scan (``engine.loop``), the
+    early-stopped while loop (``engine.convergence``) and the resumable
+    serving chunks (``engine.batch``), so every trajectory is step-for-step
+    identical.  Re-exported from ``engine.convergence`` for compatibility.
+    """
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1**i)
+    vh = v / (1 - b2**i)
+    return p - lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+
+def _dot(a, b):
+    """Flat fp32 dot product of two same-shaped arrays."""
+    return jnp.vdot(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+# --- per-optimiser state + step ---------------------------------------------
+
+
+def init_state(optimizer, params) -> dict:
+    """The optimiser-state pytree for ``params`` (a dict of fp32 leaves).
+
+    Every leaf's leading structure is static, so the state nests inside
+    lane-state dicts (``engine.batch``/``engine.serve``) and stacks,
+    splices, masks and shards like any other leaf.  State is fp32 by
+    construction even when the objective computes in reduced precision.
+    """
+    spec = resolve_optimizer(optimizer)
+    p32 = jnp.zeros(jnp.shape(params), jnp.float32)
+    if isinstance(spec, AdamOptimizer):
+        return {"m": p32, "v": p32}
+    if isinstance(spec, LbfgsOptimizer):
+        h = spec.history
+        return {
+            "s": jnp.zeros((h,) + p32.shape, jnp.float32),
+            "y": jnp.zeros((h,) + p32.shape, jnp.float32),
+            "rho": jnp.zeros((h,), jnp.float32),
+            "hlen": jnp.zeros((), jnp.int32),
+        }
+    return {"damping": jnp.float32(spec.damping)}
+
+
+def opt_step(optimizer, obj, k, p, opt, g, loss, *, lr):
+    """One optimisation step under the uniform carry protocol.
+
+    Carry invariant: ``g``/``loss`` are the gradient and loss of ``obj``
+    at the *current* ``p`` (seeded by one ``obj.vg(p0)`` evaluation before
+    the loop).  Returns ``(p1, opt1, g1, loss1, ok)`` restoring the same
+    invariant at ``p1``; ``ok`` is False when the step was rejected (a
+    collapsed L-BFGS line search, a refused Gauss-Newton trial), in which
+    case ``p1``/``g1``/``loss1`` equal their inputs numerically — the
+    iterate did not move — and the plateau rule must count the step as
+    non-improving.  Pure per-lane arithmetic throughout (bounded loops,
+    validity masks, no data-dependent shapes), so the step composes with
+    ``lax.scan``/``lax.while_loop``/``vmap``/mesh sharding unchanged.
+    """
+    spec = resolve_optimizer(optimizer)
+    if isinstance(spec, AdamOptimizer):
+        return _adam_step(spec, obj, k, p, opt, g, lr=lr)
+    if isinstance(spec, LbfgsOptimizer):
+        return _lbfgs_step(spec, obj, p, opt, g, loss)
+    return _gauss_newton_step(spec, obj, p, opt, g, loss)
+
+
+def _adam_step(spec, obj, k, p, opt, g, *, lr):
+    # exactly the pre-registry plateau_step arithmetic: 1-based f32 bias
+    # correction, update first, then one value_and_grad at the new params
+    i = (k + 1).astype(jnp.float32)
+    p, m, v = adam_update(p, opt["m"], opt["v"], g, i, lr=lr,
+                          b1=spec.b1, b2=spec.b2, eps=spec.eps)
+    loss, g = obj.vg(p)
+    return p, {"m": m, "v": v}, g, loss, jnp.bool_(True)
+
+
+def _lbfgs_step(spec, obj, p, opt, g, loss):
+    h = spec.history
+    f32 = jnp.float32
+    g32 = g.astype(f32)
+    s_hist, y_hist, rho, hlen = opt["s"], opt["y"], opt["rho"], opt["hlen"]
+
+    # two-loop recursion, newest pair at index 0; the window is statically
+    # unrolled with per-slot validity masks so the recursion is vmap-safe
+    q = g32
+    alphas = []
+    for i in range(h):
+        valid = i < hlen
+        a = jnp.where(valid, rho[i] * _dot(s_hist[i], q), f32(0.0))
+        q = q - a * y_hist[i]
+        alphas.append(a)
+    gamma = jnp.where(
+        hlen > 0,
+        _dot(s_hist[0], y_hist[0])
+        / jnp.maximum(_dot(y_hist[0], y_hist[0]), f32(1e-30)),
+        f32(1.0))
+    r = gamma * q
+    for i in range(h - 1, -1, -1):
+        valid = i < hlen
+        b = jnp.where(valid, rho[i] * _dot(y_hist[i], r), f32(0.0))
+        r = r + (alphas[i] - b) * s_hist[i]
+    d = -r
+
+    # descent safeguard: a degenerate window can produce an ascent (or
+    # non-finite) direction — restart from steepest descent
+    dg = _dot(d, g32)
+    bad = jnp.logical_or(dg >= 0, jnp.logical_not(jnp.isfinite(dg)))
+    d = jnp.where(bad, -g32, d)
+    dg = jnp.where(bad, -_dot(g32, g32), dg)
+
+    # backtracking Armijo line search as a bounded while_loop; a step with
+    # no curvature history (the start, or a post-collapse restart) probes a
+    # unit-norm displacement first — a raw registration gradient can be
+    # orders of magnitude smaller than the control-point displacements the
+    # problem needs, and the backtracker shrinks from there
+    gnorm = jnp.sqrt(_dot(d, d))
+    t0 = jnp.where(hlen > 0, f32(1.0),
+                   f32(1.0) / jnp.maximum(gnorm, f32(1e-12)))
+    c1, shrink = f32(spec.c1), f32(spec.shrink)
+
+    def ls_cond(c):
+        j, _, _, _, found = c
+        return jnp.logical_and(j < spec.max_ls, jnp.logical_not(found))
+
+    def ls_body(c):
+        j, t, t_acc, f_acc, found = c
+        f_t = obj.loss(p + t * d).astype(f32)
+        accept = jnp.logical_and(jnp.isfinite(f_t),
+                                 f_t <= loss.astype(f32) + c1 * t * dg)
+        t_acc = jnp.where(accept, t, t_acc)
+        f_acc = jnp.where(accept, f_t, f_acc)
+        return j + 1, t * shrink, t_acc, f_acc, jnp.logical_or(found, accept)
+
+    _, _, t_acc, f_acc, ok = jax.lax.while_loop(
+        ls_cond, ls_body,
+        (jnp.zeros((), jnp.int32), t0, f32(0.0), loss.astype(f32),
+         jnp.bool_(False)))
+
+    # one quadratic-interpolation refinement of the accepted step: fit the
+    # 1-D quadratic through (f(p), dg, f(p + t_acc d)) and probe its
+    # minimiser (clipped to [0, 8 t_acc]) — a single extra forward eval
+    # that lands near the line optimum when backtracking over/undershoots.
+    # Kept only when it strictly improves, so a collapsed search stays
+    # collapsed (t_acc = 0 fits a zero-length quadratic and is unchanged).
+    denom = 2.0 * (f_acc - loss.astype(f32) - dg * t_acc)
+    t_q = jnp.where(denom > 0,
+                    -dg * t_acc * t_acc / jnp.maximum(denom, f32(1e-30)),
+                    t_acc)
+    t_q = jnp.clip(t_q, f32(0.0), 8.0 * t_acc)
+    f_q = obj.loss(p + t_q * d).astype(f32)
+    refine = jnp.logical_and(ok,
+                             jnp.logical_and(jnp.isfinite(f_q), f_q < f_acc))
+    t_acc = jnp.where(refine, t_q, t_acc)
+
+    # t_acc is 0 on a collapsed search, so p1 == p exactly and the fresh
+    # vg(p1) reproduces the carried (loss, g) — the whole step stays
+    # select-free, which is what keeps the rejected-lane carry identical
+    # to a frozen lane under vmap masking
+    p1 = p + t_acc * d
+    loss1, g1 = obj.vg(p1)
+
+    # curvature-gated history push (only accepted steps with s^T y > 0
+    # keep the inverse-Hessian approximation positive definite)
+    s_new = (p1 - p).astype(f32)
+    y_new = (g1 - g).astype(f32)
+    sy = _dot(s_new, y_new)
+    push = jnp.logical_and(ok, sy > f32(1e-10))
+    s_roll = jnp.concatenate([s_new[None], s_hist[:-1]], axis=0)
+    y_roll = jnp.concatenate([y_new[None], y_hist[:-1]], axis=0)
+    rho_roll = jnp.concatenate(
+        [(f32(1.0) / jnp.maximum(sy, f32(1e-30)))[None], rho[:-1]])
+    # a collapsed search drops the curvature window: the quasi-Newton
+    # direction it produced is not usable at any tried scale, and keeping
+    # the window would re-propose the identical step (the state is the
+    # whole carry) — a deterministic deadlock.  Resetting restarts the
+    # next step from safeguarded steepest descent.
+    hlen1 = jnp.where(ok, jnp.where(push, jnp.minimum(hlen + 1, h), hlen),
+                      jnp.zeros((), jnp.int32))
+    opt1 = {
+        "s": jnp.where(push, s_roll, s_hist),
+        "y": jnp.where(push, y_roll, y_hist),
+        "rho": jnp.where(push, rho_roll, rho),
+        "hlen": hlen1,
+    }
+    return p1, opt1, g1, loss1, ok
+
+
+def _gauss_newton_step(spec, obj, p, opt, g, loss):
+    if obj.residual is None:
+        raise ValueError(
+            "optimizer='gauss_newton' needs a residual objective "
+            "(similarity='ssd'); this objective has none")
+    f32 = jnp.float32
+    lam = opt["damping"]
+
+    # linearise the residual once per step: J^T J v = vjp(jvp(v)).  The
+    # residual must live on a jvp-capable graph (no custom_vjp inside) —
+    # ffd_level_objective pins its residual to grad_impl="xla" for this.
+    r0, jvp_fn = jax.linearize(obj.residual, p)
+    vjp_fn = jax.linear_transpose(jvp_fn, p)
+    n = f32(r0.size)
+
+    if obj.reg is not None:
+        # both built-in regularizers are quadratic in p, so linearising
+        # their gradient gives the exact Hessian product
+        _, reg_hvp = jax.linearize(jax.grad(obj.reg), p)
+    else:
+        def reg_hvp(v):
+            return jnp.zeros_like(v)
+
+    def hess_v(v):
+        (jtjv,) = vjp_fn(jvp_fn(v))
+        return (2.0 / n) * jtjv + reg_hvp(v) + lam * v
+
+    # CG on (H + lam I) d = -g, fixed cap (matrix-free, vmap-safe)
+    b = -g.astype(f32)
+
+    def cg_body(_, c):
+        x, res, direc, rs = c
+        hd = hess_v(direc)
+        denom = _dot(direc, hd)
+        alpha = rs / jnp.maximum(denom, f32(1e-30))
+        x = x + alpha * direc
+        res = res - alpha * hd
+        rs_new = _dot(res, res)
+        beta = rs_new / jnp.maximum(rs, f32(1e-30))
+        return x, res, res + beta * direc, rs_new
+
+    d, _, _, _ = jax.lax.fori_loop(
+        0, spec.cg_iters, cg_body,
+        (jnp.zeros_like(b), b, b, _dot(b, b)))
+
+    # LM trial: accept only a finite, strictly lower loss; a rejected step
+    # leaves the iterate exactly in place (gain = 0-scaled direction) and
+    # raises the damping for the next attempt
+    loss_try = obj.loss(p + d).astype(f32)
+    ok = jnp.logical_and(jnp.isfinite(loss_try),
+                         loss_try < loss.astype(f32))
+    ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(d)))
+    p1 = p + jnp.where(ok, f32(1.0), f32(0.0)) * d
+    loss1, g1 = obj.vg(p1)
+    lam1 = jnp.where(
+        ok,
+        jnp.maximum(lam / f32(spec.damp_down), f32(spec.min_damping)),
+        jnp.minimum(lam * f32(spec.damp_up), f32(spec.max_damping)))
+    return p1, {"damping": lam1}, g1, loss1, ok

@@ -8,7 +8,7 @@ cares about its own latency.  This module transplants the continuous
 batching idea from LLM serving (retire a finished sequence's slot and splice
 the next prompt in, instead of waiting for the whole batch) onto the
 registration loop, where the per-lane convergence mask of the early-stopped
-Adam loop (``engine.convergence``) is the retire signal:
+optimiser loop (``engine.convergence``) is the retire signal:
 
 * Requests are **bucketed by volume shape**: one set of compiled programs
   per bucket (reusing the module-level runner caches in ``engine.batch``),
@@ -38,9 +38,11 @@ clean instead of hanging.
 
 The lane programs inherit the full ``RegistrationOptions`` surface through
 ``engine.batch``'s option-keyed compiles — including the ``transform=``
-(diffeomorphic velocity fields) and ``regularizer=`` (analytic bending
-energy) axes, which change only the per-lane loss/finish programs, not the
-scheduling mechanics.
+(diffeomorphic velocity fields), ``regularizer=`` (analytic bending
+energy) and ``optimizer=`` (second-order L-BFGS / Gauss-Newton) axes, which
+change only the per-lane loss/step/finish programs, not the scheduling
+mechanics: the optimiser state nests under the lane dict's ``"opt"`` key and
+splices/freezes like any other leaf.
 """
 from __future__ import annotations
 
@@ -59,6 +61,7 @@ from repro.core import ffd
 from repro.core.options import RegistrationOptions
 from repro.engine.batch import (compile_finish, compile_level_chunk,
                                 compile_level_splice, level_vol_shapes)
+from repro.engine.optimizer import init_state
 
 __all__ = ["QueueFull", "RegistrationTimeout", "ServeResult", "ServeStats",
            "RequestHandle", "RegistrationScheduler",
@@ -84,7 +87,7 @@ class ServeResult:
     warped: Any            # (X, Y, Z) registered moving volume
     params: Any            # finest-level control grid (gx, gy, gz, 3)
     losses: list           # final loss per pyramid level (coarse -> fine)
-    steps: list            # Adam steps actually run per level
+    steps: list            # optimiser steps actually run per level
     seconds: float         # submit -> complete latency (scheduler clock)
     recycled: bool = False # True if any lane was spliced mid-flight
 
@@ -201,7 +204,7 @@ class RegistrationScheduler:
       lanes: lane-array width per stage — the in-flight pair capacity of
         each pyramid level.  With ``mesh=``, must be a multiple of
         ``engine.shard.batch_multiple(mesh)``.
-      chunk: Adam steps per scheduling slice.  Smaller -> finer recycling
+      chunk: optimiser steps per scheduling slice.  Smaller -> finer recycling
         granularity (lower queue latency) but more host round-trips;
         ``chunk`` never affects results, only when the host looks.
       max_queue: admission bound on waiting requests (across buckets);
@@ -302,8 +305,8 @@ class RegistrationScheduler:
         """One scheduling round over every bucket; returns completions.
 
         Per stage, coarse -> fine: expire dead queue entries, splice queued
-        pairs into free lanes, run one ``chunk`` of masked Adam steps, then
-        harvest lanes whose convergence mask retired — migrating them to
+        pairs into free lanes, run one ``chunk`` of masked optimiser
+        steps, then harvest lanes whose convergence mask retired — migrating them to
         the next stage's queue (so a pair can traverse one stage per round)
         or finishing with the full-resolution warp.
         """
@@ -376,7 +379,14 @@ class RegistrationScheduler:
         zg = jnp.zeros((W,) + grid, jnp.float32)
         zi = jnp.zeros((W,), jnp.int32)
         zf = jnp.zeros((W,), jnp.float32)
-        state = dict(phi=zg, m=zg, v=zg, g=zg, best_p=zg, k=zi, since=zi,
+        # the optimiser state's lane template comes from the registry, so a
+        # new optimiser's lanes allocate (and shard) without touching the
+        # scheduler: every leaf is stacked to a leading (W, ...) lane axis
+        opt = jax.tree.map(
+            lambda a: jnp.zeros((W,) + a.shape, a.dtype),
+            init_state(bucket.options.optimizer, jnp.zeros(grid,
+                                                           jnp.float32)))
+        state = dict(phi=zg, opt=opt, g=zg, best_p=zg, k=zi, since=zi,
                      best=zf, loss=zf, active=jnp.zeros((W,), jnp.bool_))
         stage.fixed = jnp.zeros((W,) + lvl_shape, jnp.float32)
         stage.moving = jnp.zeros((W,) + lvl_shape, jnp.float32)
@@ -432,7 +442,7 @@ class RegistrationScheduler:
                           opts.stop, opts.iters):
                 continue
             # retired: its carry froze at the stopping point, so best_p is
-            # exactly the solo adam_until result
+            # exactly the solo optimize_until result
             req.phi = stage.state["best_p"][i]
             req.losses.append(float(host["best"][i]))
             req.steps.append(int(host["k"][i]))

@@ -9,7 +9,8 @@ across devices, not just the kernel).
 
 The layout comes from ``repro.distributed.sharding.REGISTRATION_RULES``:
 batch → the mesh's data axes, everything per-pair (volume and grid geometry,
-the displacement channel, Adam moments, loss traces) replicated per shard.
+the displacement channel, optimiser state, loss traces) replicated per
+shard.
 ``sharded_pipeline`` re-states that placement with
 ``with_sharding_constraint`` at every pyramid level and ``lax.scan``
 boundary, so GSPMD never has a reason to gather the batch axis mid-loop.
@@ -32,7 +33,7 @@ from jax.sharding import NamedSharding
 
 from repro.core import ffd
 from repro.distributed.sharding import REGISTRATION_RULES
-from repro.engine.loop import adam_scan
+from repro.engine.loop import optimize_scan
 
 __all__ = [
     "VOLUME_AXES",
@@ -133,25 +134,31 @@ def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
                      bending_weight, mode, impl, similarity, mesh,
                      grad_impl="xla", compute_dtype=None,
                      transform="displacement", regularizer="none",
-                     rules=None, stop=None, fused="off"):
+                     rules=None, stop=None, fused="off", optimizer="adam"):
     """Batched multi-level FFD with explicit sharding constraints.
 
     Same math as ``jax.vmap(engine.batch.ffd_pipeline)`` — the pyramid, the
-    per-level ``ffd_level_loss`` + ``adam_scan``, the final warp — but
-    batch-first, with the REGISTRATION_RULES placement re-asserted on the
-    pyramid, on the control grid entering and leaving every scan level, and
-    on the outputs.  Returns ``(warped, phi, losses)`` with shapes
+    per-level ``ffd_level_objective`` + ``optimize_scan``, the final warp —
+    but batch-first, with the REGISTRATION_RULES placement re-asserted on
+    the pyramid, on the control grid entering and leaving every scan level,
+    and on the outputs.  Returns ``(warped, phi, losses)`` with shapes
     ``(B, X, Y, Z)``, ``(B, *grid, 3)``, ``(B, levels)``.
 
+    ``optimizer`` (name or ``engine.optimizer`` spec) picks the per-level
+    loop; every registered step is pure per-pair arithmetic — bounded inner
+    loops, validity masks, no data-dependent shapes — so the L-BFGS history
+    window and the Gauss-Newton CG solve shard exactly like the Adam
+    moments (per-pair state replicated along the batch axis, no cross-
+    device traffic beyond the loop predicate's all-reduce).
+
     ``stop`` (a resolved ``ConvergenceConfig``) swaps each level's scan for
-    the early-stopped ``lax.while_loop`` (``engine.convergence.adam_until``)
-    — the loop's lane masking is pure per-pair arithmetic, so it shards
-    exactly like the scan (batch over data, no cross-device traffic beyond
-    the loop predicate's all-reduce) — and appends a ``(B, levels)`` steps
-    array to the return.
+    the early-stopped ``lax.while_loop``
+    (``engine.convergence.optimize_until``) — the loop's lane masking is
+    per-pair arithmetic too, so it shards exactly like the scan — and
+    appends a ``(B, levels)`` steps array to the return.
     """
-    from repro.engine.batch import ffd_level_loss
-    from repro.engine.convergence import adam_until
+    from repro.engine.batch import ffd_level_objective
+    from repro.engine.convergence import optimize_until
 
     rules = REGISTRATION_RULES(mesh.axis_names) if rules is None else rules
 
@@ -179,15 +186,17 @@ def sharded_pipeline(fixed, moving, *, tile, levels, iters, lr,
         phi = cons(phi, GRID_AXES)
 
         def level(f1, m1, p1):
-            loss_fn = ffd_level_loss(
+            obj = ffd_level_objective(
                 f1, m1, tile=tile, bending_weight=bending_weight,
                 mode=mode, impl=impl, grad_impl=grad_impl,
                 compute_dtype=compute_dtype, similarity=similarity,
                 transform=transform, regularizer=regularizer,
                 fused=fused)
             if stop is None:
-                return adam_scan(loss_fn, p1, iters=iters, lr=lr)
-            return adam_until(loss_fn, p1, stop=stop, lr=lr)
+                return optimize_scan(obj, p1, optimizer=optimizer,
+                                     iters=iters, lr=lr)
+            return optimize_until(obj, p1, optimizer=optimizer, stop=stop,
+                                  lr=lr)
 
         out = jax.vmap(level)(f, m, phi)
         phi, trace = out[:2]
@@ -214,7 +223,7 @@ def compile_sharded_batch(mesh, tile, levels, iters, lr,
                           bending_weight, mode, impl, similarity,
                           grad_impl="xla", compute_dtype=None,
                           transform="displacement", regularizer="none",
-                          stop=None, fused="off"):
+                          stop=None, fused="off", optimizer="adam"):
     """Build the jitted sharded pipeline for one (mesh, configuration).
 
     Uncached by design: ``engine.batch._compiled_batch`` is the single
@@ -239,7 +248,7 @@ def compile_sharded_batch(mesh, tile, levels, iters, lr,
             grad_impl=grad_impl, compute_dtype=compute_dtype,
             similarity=similarity, transform=transform,
             regularizer=regularizer, mesh=mesh, rules=rules, stop=stop,
-            fused=fused)
+            fused=fused, optimizer=optimizer)
 
     return jax.jit(batched, in_shardings=(vol_sh, vol_sh),
                    out_shardings=out_sh)
